@@ -1,0 +1,128 @@
+"""Paper-table reproductions (Fig. 2, Fig. 9, Tables 1-3) from the analytical
+accelerator model driven by real workload GEMM shapes.
+
+Every row prints: ours (modeled) vs paper (measured) with the delta, so the
+reproduction quality is visible in bench_output.txt.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import analytical as an
+from repro.core import workloads
+
+ARRIA10_GX1150_DSPS = 1518
+ARRIA10_SX660_DSPS = 1687
+
+
+def fig2_registers() -> List[str]:
+    rows = ["fig2.w,fip_regs,fip_extra_regs,ffip_regs"]
+    for r in an.fig2_table(x=64, d=1):
+        rows.append(f"fig2.w={r['w']},{r['fip']},{r['fip_extra']},{r['ffip']}")
+    return rows
+
+
+def fig9_sweep() -> List[str]:
+    """Baseline/FIP/FFIP MXUs from 32..88, 8-bit: DSPs, fmax, ResNet-50 GOPS.
+    Derived checks: baseline no longer fits past 56x56 on the SX660 (paper);
+    (F)FIP fits to 80x80 — the paper's '2x effective PEs' headline."""
+    rows = ["fig9.algo_size,dsps,fits_sx660,fmax_mhz,resnet50_gops"]
+    gemms = workloads.resnet50(batch=2)
+    for algo in ("baseline", "fip", "ffip"):
+        for size in range(32, 96, 8):
+            cfg = an.MxuConfig(x=size, y=size, algo=algo, w_bits=8)
+            dsps = an.mxu_dsps(cfg)
+            fits = dsps <= ARRIA10_SX660_DSPS
+            perf = an.model_performance(gemms, cfg) if fits else None
+            rows.append(
+                f"fig9.{algo}_{size}x{size},{dsps},{int(fits)},"
+                f"{an.mxu_fmax_mhz(cfg):.0f},"
+                f"{perf['gops']:.0f}" if fits else
+                f"fig9.{algo}_{size}x{size},{dsps},0,-,-")
+    # headline derived facts
+    base_56 = an.mxu_dsps(an.MxuConfig(56, 56, "baseline", 8))
+    base_64 = an.mxu_dsps(an.MxuConfig(64, 64, "baseline", 8))
+    ffip_80 = an.mxu_dsps(an.MxuConfig(80, 80, "ffip", 8))
+    ffip_88 = an.mxu_dsps(an.MxuConfig(88, 88, "ffip", 8))
+    rows.append(f"fig9.derived.baseline_56_fits,{int(base_56 <= ARRIA10_SX660_DSPS)},expect,1")
+    rows.append(f"fig9.derived.baseline_64_fits,{int(base_64 <= ARRIA10_SX660_DSPS)},expect,0")
+    rows.append(f"fig9.derived.ffip_80_fits,{int(ffip_80 <= ARRIA10_SX660_DSPS)},expect,1")
+    rows.append(f"fig9.derived.ffip_88_fits,{int(ffip_88 <= ARRIA10_SX660_DSPS)},expect,0")
+    rows.append("fig9.derived.effective_pe_ratio,"
+                f"{80 * 80 / (56 * 56):.2f},expect,>2")
+    return rows
+
+
+_T1 = [  # (model, batch, paper_gops) 8-bit FFIP 64x64 @388MHz, Table 1
+    ("alexnet", 32, 2277), ("resnet50", 2, 2529),
+    ("resnet101", 2, 2752), ("resnet152", 2, 2838),
+]
+_T2 = [  # 16-bit FFIP 64x64 @346MHz, Table 2
+    ("alexnet", 32, 1974), ("resnet50", 2, 2258),
+    ("resnet101", 2, 2458), ("resnet152", 2, 2534),
+]
+
+
+def _table(rows_spec, w_bits: int, tag: str) -> List[str]:
+    rows = [f"{tag}.model,ours_gops,paper_gops,delta_pct,"
+            f"ours_gops_per_mult,ours_ops_per_mult_cycle,paper_ops_per_mult_cycle_max4"]
+    cfg = an.MxuConfig(x=64, y=64, algo="ffip", w_bits=w_bits)
+    for model, batch, paper in rows_spec:
+        perf = an.model_performance(workloads.MODELS[model](batch), cfg)
+        delta = 100 * (perf["gops"] - paper) / paper
+        rows.append(
+            f"{tag}.{model},{perf['gops']:.0f},{paper},{delta:+.1f},"
+            f"{perf['gops_per_multiplier']:.3f},"
+            f"{perf['ops_per_mult_per_cycle']:.3f},4.0")
+    return rows
+
+
+def table1() -> List[str]:
+    return _table(_T1, 8, "table1")
+
+
+def table2() -> List[str]:
+    return _table(_T2, 16, "table2")
+
+
+def table3() -> List[str]:
+    """Cross-FPGA comparison: the paper's own rows are reused from T1/T2; the
+    reproduction contribution here is the prior-work comparison metrics, which
+    are the paper's reported numbers (we list ours vs best-in-class prior)."""
+    prior_best = {  # best prior ops/mult/cycle per column of Table 3
+        "alexnet_16b": 1.657, "resnet50_8b": 1.289, "resnet50_16b": 0.823,
+        "resnet101_16b": 1.922, "resnet152_16b": 0.957,
+    }
+    ours = {
+        "alexnet_16b": ("alexnet", 32, 16), "resnet50_8b": ("resnet50", 2, 8),
+        "resnet50_16b": ("resnet50", 2, 16),
+        "resnet101_16b": ("resnet101", 2, 16),
+        "resnet152_16b": ("resnet152", 2, 16),
+    }
+    rows = ["table3.column,ours_ops_per_mult_cycle,best_prior,speedup"]
+    for col, (model, batch, bits) in ours.items():
+        cfg = an.MxuConfig(x=64, y=64, algo="ffip", w_bits=bits)
+        perf = an.model_performance(workloads.MODELS[model](batch), cfg)
+        v = perf["ops_per_mult_per_cycle"]
+        rows.append(f"table3.{col},{v:.3f},{prior_best[col]},{v / prior_best[col]:.2f}x")
+    return rows
+
+
+def fip_vs_ffip_vs_baseline() -> List[str]:
+    """§6.1 core claims at 64x64, 8-bit."""
+    rows = ["sec6p1.metric,baseline,fip,ffip"]
+    cfgs = {a: an.MxuConfig(64, 64, a, 8) for a in ("baseline", "fip", "ffip")}
+    gemms = workloads.resnet50(batch=2)
+    perfs = {a: an.model_performance(gemms, c) for a, c in cfgs.items()}
+    rows.append("sec6p1.dsps," + ",".join(str(perfs[a]["dsps"]) for a in perfs))
+    rows.append("sec6p1.fmax_mhz," + ",".join(f"{perfs[a]['fmax_mhz']:.0f}" for a in perfs))
+    rows.append("sec6p1.gops," + ",".join(f"{perfs[a]['gops']:.0f}" for a in perfs))
+    rows.append("sec6p1.ops_per_mult_cycle," +
+                ",".join(f"{perfs[a]['ops_per_mult_per_cycle']:.2f}" for a in perfs))
+    f_fip = perfs["fip"]["fmax_mhz"] / perfs["baseline"]["fmax_mhz"]
+    f_ffip = perfs["ffip"]["fmax_mhz"] / perfs["fip"]["fmax_mhz"]
+    rows.append(f"sec6p1.derived.fip_freq_penalty,{f_fip:.2f},expect,~0.70")
+    rows.append(f"sec6p1.derived.ffip_freq_recovery,{f_ffip:.2f},expect,>1.30")
+    rows.append(f"sec6p1.derived.dsp_reduction,"
+                f"{perfs['baseline']['dsps'] / perfs['ffip']['dsps']:.2f},expect,~1.94")
+    return rows

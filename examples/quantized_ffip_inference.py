@@ -1,0 +1,72 @@
+"""The paper's deployment story: int8 quantized inference through FFIP with
+every ML-specific optimization from §3.3/§4.4:
+
+  * both-signed quantization (d=1 pre-adders),
+  * beta folded into the bias (Eq. 15) — free at inference,
+  * y-deltas precomputed from weights (Eq. 9),
+  * zero-point contributions removed via the adjuster algebra (Eq. 20),
+and verifies the int32 accumulators are BIT-EXACT vs the baseline quantized
+GEMM while using ~half the multiplies.
+
+    PYTHONPATH=src python examples/quantized_ffip_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytical as an
+from repro.core import fip, quant
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    # a 2-layer MLP "deployed" with 8-bit weights/activations
+    x = jax.random.normal(k1, (32, 256))
+    w1 = jax.random.normal(k2, (256, 512)) * 0.05
+    w2 = jax.random.normal(k3, (512, 64)) * 0.05
+    b1 = jnp.zeros((512,))
+    b2 = jnp.zeros((64,))
+
+    xq = quant.calibrate(x, jnp.int8, symmetric=False)     # activations: affine
+    w1q = quant.calibrate(w1, jnp.int8, symmetric=True)    # weights: symmetric
+    w2q_in_calib = None
+
+    h_float = jax.nn.relu(x @ w1 + b1)
+    y_float = h_float @ w2 + b2
+
+    # layer 1 through FFIP int8
+    h = quant.quantized_dense_ffip(x, w1, b1, xq, w1q, algo="ffip")
+    h = jax.nn.relu(h)
+    hq = quant.calibrate(h, jnp.int8, symmetric=False)
+    w2q = quant.calibrate(w2, jnp.int8, symmetric=True)
+    y = quant.quantized_dense_ffip(h, w2, b2, hq, w2q, algo="ffip")
+
+    rms = float(jnp.sqrt(jnp.mean((y - y_float) ** 2)))
+    ref = float(jnp.sqrt(jnp.mean(y_float ** 2)))
+    print(f"quantization SNR: {20 * np.log10(ref / rms):.1f} dB "
+          f"(int8 path vs float reference)")
+
+    # bit-exactness of the arithmetic rearrangement itself
+    aq = quant.quantize(x, xq)
+    bq = quant.quantize(w1, w1q)
+    base = quant.int_gemm_baseline(aq, bq, xq.zero_point, w1q.zero_point)
+    ffip = quant.int_gemm_ffip(aq, bq, xq.zero_point, w1q.zero_point)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(ffip))
+    print("int32 accumulators: FFIP == baseline, bit-exact")
+
+    m, k, n = aq.shape[0], aq.shape[1], bq.shape[1]
+    print(f"multiplies: baseline {an.baseline_mults(m, k, n)}, "
+          f"ffip {an.fip_mults(m, k, n)} "
+          f"({an.fip_mults(m, k, n) / an.baseline_mults(m, k, n):.3f}x)")
+
+    # the 1-extra-bit y encoding (Eq. 9 + §4.4)
+    y_enc = fip.make_y(bq.astype(jnp.int32))
+    assert int(jnp.max(jnp.abs(y_enc))) < 2 ** 8  # fits 9 bits signed
+    print("y-delta encoding fits w+1 bits — matches §4.4 storage claim")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

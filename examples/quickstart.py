@@ -1,0 +1,66 @@
+"""Quickstart: the paper's FFIP arithmetic end-to-end in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Shows FIP/FFIP computing exact matmuls with ~half the multiplications.
+2. Runs the FFIP Pallas TPU kernel (interpret mode on CPU) vs the oracle.
+3. Swaps the GEMM provider under a real model (starcoder2 smoke config) and
+   trains a few steps — same loss curve, halved multiply count.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import analytical as an
+from repro.core import fip
+from repro.core.gemm import GemmConfig, use_gemm
+from repro.kernels import ops
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.train.step import TrainConfig, make_train_step
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # --- 1. the algebra ----------------------------------------------------
+    m, k, n = 64, 128, 32
+    a = jax.random.normal(key, (m, k))
+    b = jax.random.normal(key, (k, n))
+    c_base = a @ b
+    c_fip = fip.fip_matmul(a, b)
+    c_ffip = fip.ffip_matmul(a, b)
+    print("max |FIP - baseline| :", float(jnp.max(jnp.abs(c_fip - c_base))))
+    print("max |FFIP - baseline|:", float(jnp.max(jnp.abs(c_ffip - c_base))))
+    print(f"multiplications: baseline={an.baseline_mults(m, k, n)} "
+          f"fip={an.fip_mults(m, k, n)} "
+          f"(ratio {an.fip_mults(m, k, n) / an.baseline_mults(m, k, n):.3f})")
+
+    # --- 2. the Pallas kernel ----------------------------------------------
+    c_kernel = ops.matmul(a, b, algo="ffip", interpret=True)
+    print("max |FFIP kernel - baseline|:",
+          float(jnp.max(jnp.abs(c_kernel - c_base))))
+
+    # --- 3. under a real model ----------------------------------------------
+    cfg = configs.smoke_config(configs.get_config("starcoder2-3b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(model, TrainConfig()))
+    batch = {
+        "tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab),
+    }
+    with use_gemm(GemmConfig(algo="ffip", impl="ref")):
+        _, _, m_ffip = step(params, opt, batch)
+    _, _, m_base = step(params, opt, batch)
+    print(f"loss with FFIP GEMM provider: {float(m_ffip['loss']):.4f}")
+    print(f"loss with baseline provider : {float(m_base['loss']):.4f}")
+    np.testing.assert_allclose(float(m_ffip["loss"]), float(m_base["loss"]),
+                               rtol=1e-3)
+    print("OK: identical model, identical numerics, half the multiplies.")
+
+
+if __name__ == "__main__":
+    main()

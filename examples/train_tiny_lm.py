@@ -1,0 +1,77 @@
+"""End-to-end training driver: ~100M-param LM, resumable, fault-tolerant.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --steps 300          # full
+    PYTHONPATH=src python examples/train_tiny_lm.py --preset micro --steps 30
+
+Demonstrates the whole substrate: synthetic data pipeline (prefetch thread),
+AdamW + WSD schedule, chunked-CE loss, checkpoint/restart (kill it mid-run and
+re-invoke — it resumes from the last checkpoint), straggler watchdog, and the
+crash-restart wiring (--simulate-crash N aborts at step N; the next invocation
+resumes)."""
+import argparse
+import dataclasses
+import sys
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.step import TrainConfig
+
+PRESETS = {
+    # ~100M params: 131k vocab x 512 emb (67M) + 6-layer/512-wide backbone
+    "100m": ModelConfig(name="tiny-lm-100m", family="dense", n_layers=6,
+                        d_model=512, n_heads=8, n_kv_heads=8, d_ff=1536,
+                        vocab=131072, tie_embeddings=True,
+                        param_dtype="float32"),
+    "micro": ModelConfig(name="tiny-lm-micro", family="dense", n_layers=2,
+                         d_model=128, n_heads=4, n_kv_heads=4, d_ff=384,
+                         vocab=2048, tie_embeddings=True,
+                         param_dtype="float32"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="100m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm_ckpt")
+    ap.add_argument("--simulate-crash", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model {cfg.name}: ~{n_params / 1e6:.0f}M params")
+
+    crash_at = args.simulate_crash
+
+    def log(m):
+        print(f"step {m['data_step']:>5}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  |g| {m['grad_norm']:.3f}", flush=True)
+        if crash_at and m["data_step"] >= crash_at:
+            print("SIMULATED CRASH — rerun to resume from checkpoint")
+            sys.exit(42)
+
+    out = train(
+        model,
+        loop_cfg=LoopConfig(total_steps=args.steps, global_batch=args.batch,
+                            seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                            ckpt_every=25, log_every=5),
+        train_cfg=TrainConfig(optimizer=AdamWConfig(
+            lr=3e-4, schedule="wsd", warmup_steps=20,
+            total_steps=args.steps, decay_frac=0.2)),
+        log_fn=log,
+    )
+    losses = [h["loss"] for h in out["history"]]
+    print(f"first logged loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "loss should decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.core import analytical, fip, gemm, im2col, quant, workloads  # noqa: F401

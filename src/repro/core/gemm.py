@@ -1,0 +1,86 @@
+"""Pluggable GEMM provider — the paper's 'drop-in systolic array swap'.
+
+The paper's headline architectural claim is that an FFIP MXU substitutes for a
+traditional systolic array "without fundamentally altering the accelerator's
+functionality or internal interfaces in any way". We realize that claim at
+the framework level: every matmul in the model zoo calls :func:`gemm`, and a
+context-scoped :class:`GemmConfig` chooses
+
+    algo ∈ {baseline, fip, ffip}   ×   impl ∈ {xla, ref, pallas}
+
+with identical numerics (bit-exact for ints, allclose for floats). The
+default production path is (baseline, xla) — the MXU path; see DESIGN.md §2
+for why FIP arithmetic is not a throughput win on TPU silicon.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fip
+
+Array = jax.Array
+Algo = Literal["baseline", "fip", "ffip"]
+Impl = Literal["xla", "ref", "pallas"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    algo: Algo = "baseline"
+    impl: Impl = "xla"
+    k_chunk: int = 0           # chunking for ref fip/ffip cross-term
+    interpret: bool = True     # pallas interpret mode (CPU container)
+
+
+_state = threading.local()
+
+
+def current_config() -> GemmConfig:
+    return getattr(_state, "cfg", GemmConfig())
+
+
+@contextlib.contextmanager
+def use_gemm(cfg: GemmConfig):
+    prev = getattr(_state, "cfg", None)
+    _state.cfg = cfg
+    try:
+        yield
+    finally:
+        if prev is None:
+            del _state.cfg
+        else:
+            _state.cfg = prev
+
+
+def _pad_even_k(a: Array, b: Array):
+    k = a.shape[-1]
+    if k % 2 == 0:
+        return a, b
+    pad_a = [(0, 0)] * (a.ndim - 1) + [(0, 1)]
+    return jnp.pad(a, pad_a), jnp.pad(b, ((0, 1), (0, 0)))
+
+
+def gemm(a: Array, b: Array, cfg: Optional[GemmConfig] = None) -> Array:
+    """C = A @ B through the configured provider. a: (..., M, K), b: (K, N)."""
+    cfg = cfg or current_config()
+    if cfg.algo == "baseline":
+        if cfg.impl == "pallas":
+            from repro.kernels import ops as kops
+            return kops.matmul(a, b, algo="baseline", interpret=cfg.interpret)
+        return jnp.matmul(a, b)
+
+    a, b = _pad_even_k(a, b)
+    if cfg.impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.matmul(a, b, algo=cfg.algo, interpret=cfg.interpret)
+    # 'xla' and 'ref' for fip/ffip both lower the exact algebra through XLA;
+    # trainable wrappers give analytic (baseline) gradients.
+    fn = (fip.fip_matmul_trainable if cfg.algo == "fip"
+          else fip.ffip_matmul_trainable)
+    out = fn(a, b, cfg.k_chunk)
+    return out.astype(jnp.result_type(a.dtype, b.dtype))

@@ -1,0 +1,132 @@
+"""Algorithm 1: in-place mapping of 2-D convolution to GEMM (§5.1).
+
+The paper's memory subsystem walks conv inputs with multi-digit counters
+(programmable digit sizes/strides, Fig. 5) so that the systolic array sees a
+GEMM without a standalone im2col re-layout stage. We reproduce:
+
+  * :class:`MultiDigitCounter` — the Fig.-5 counter (nested digits, each with
+    a size and a stride; the emitted address is the sum of digit values),
+  * :func:`conv_gemm_indices` — Algorithm 1 specialised to NHWC conv,
+    producing (M, K) gather indices into the padded input,
+  * :func:`conv2d_via_gemm` — materialises A via the indices and runs any
+    GEMM provider (baseline / FIP / FFIP), validated against lax.conv.
+  * :func:`partition_blocks` — the §5.1.1 B-way memory partitioning of the
+    W dimension (interleaved submemories), with the kw-crossing adjustment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Digit:
+    """One digit of the Fig.-5 counter: iterates size times with given stride."""
+    name: str
+    size: int
+    stride: int
+
+
+class MultiDigitCounter:
+    """Nested multi-digit counter: outer digits first (Algorithm 1 loop order).
+
+    Emitted value = sum of (digit_index * stride) over digits — exactly the
+    ``address = m_offset + k_offset`` composition in Algorithm 1.
+    """
+
+    def __init__(self, digits: Sequence[Digit]):
+        self.digits = list(digits)
+
+    def addresses(self) -> np.ndarray:
+        grids = np.meshgrid(
+            *[np.arange(d.size) * d.stride for d in self.digits], indexing="ij")
+        out = np.zeros_like(grids[0])
+        for g in grids:
+            out = out + g
+        return out.reshape(-1)
+
+
+def conv_gemm_indices(h: int, w: int, cin: int, kh: int, kw: int,
+                      stride: int = 1) -> np.ndarray:
+    """Algorithm-1 address pattern for one image: (M, K) indices into the
+    flattened (H, W, Cin) input, M = OH*OW, K = KH*KW*Cin.
+
+    Loop order mirrors Algorithm 1: the kernel-offset digits (kh, kw, cin)
+    form K (k_offset), the spatial digits (h, w) form M (m_offset); the final
+    address is their sum — no data movement, only address arithmetic.
+    """
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    # m_offset counter: h (row stride = stride*W*Cin), w (stride*Cin)
+    m_counter = MultiDigitCounter([
+        Digit("h", oh, stride * w * cin),
+        Digit("w", ow, stride * cin),
+    ])
+    # k_offset counter: kh (W*Cin), kw (Cin), cin (1)
+    k_counter = MultiDigitCounter([
+        Digit("kh", kh, w * cin),
+        Digit("kw", kw, cin),
+        Digit("cin", cin, 1),
+    ])
+    m_off = m_counter.addresses()            # (M,)
+    k_off = k_counter.addresses()            # (K,)
+    return m_off[:, None] + k_off[None, :]   # (M, K)
+
+
+def conv2d_via_gemm(x: Array, kernel: Array, *, stride: int = 1, pad: int = 0,
+                    gemm_fn: Callable[[Array, Array], Array] | None = None) -> Array:
+    """NHWC conv via Algorithm-1 GEMM mapping.
+
+    x: (B, H, W, Cin); kernel: (KH, KW, Cin, Cout) -> (B, OH, OW, Cout).
+    """
+    if gemm_fn is None:
+        gemm_fn = lambda a, b: jnp.matmul(a, b)
+    b_, h, w, cin = x.shape
+    kh, kw, _, cout = kernel.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        h, w = h + 2 * pad, w + 2 * pad
+    idx = jnp.asarray(conv_gemm_indices(h, w, cin, kh, kw, stride))  # (M, K)
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    flat = x.reshape(b_, h * w * cin)
+    a = flat[:, idx]                                # (B, M, K) gather, in-place map
+    bmat = kernel.reshape(kh * kw * cin, cout)      # (K, N)
+    c = gemm_fn(a, bmat)                            # (B, M, N)
+    return c.reshape(b_, oh, ow, cout)
+
+
+# ---------------------------------------------------------------------------
+# §5.1.1: B-way memory partitioning of the W dimension
+# ---------------------------------------------------------------------------
+
+def partition_blocks(w_indices: np.ndarray, ws: int, n_blocks: int) -> List[np.ndarray]:
+    """Split a stream of w-coordinates into B interleaved submemory streams.
+
+    Each W slice is ``ws`` elements wide; slice s goes to block s % B. Returns
+    per-block index arrays; the main clock interleaves them round-robin.
+    """
+    slice_id = w_indices // ws
+    return [w_indices[slice_id % n_blocks == b] for b in range(n_blocks)]
+
+
+def interleave_blocks(blocks: List[np.ndarray], order: np.ndarray | None = None) -> np.ndarray:
+    """Round-robin re-interleave (the main-clock view). ``order`` permutes the
+    block visiting order — the §5.1.1 kw-crossing adjustment rotates it when a
+    kernel-window read starts inside a different block."""
+    n = len(blocks)
+    if order is None:
+        order = np.arange(n)
+    max_len = max(len(b) for b in blocks)
+    out = []
+    for i in range(max_len):
+        for j in order:
+            if i < len(blocks[j]):
+                out.append(blocks[j][i])
+    return np.asarray(out)

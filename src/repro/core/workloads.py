@@ -1,0 +1,107 @@
+"""CNN workload shape tables (AlexNet, VGG16, ResNet-50/101/152).
+
+Used by the benchmark layer to drive the paper's deterministic cycle model
+(Tables 1-3 reproduce GOPS / GOPS-per-multiplier / ops-per-mult-per-cycle on
+these models). Conv layers are expressed as the GEMMs the accelerator's
+in-place conv->GEMM mapping (Algorithm 1) produces:
+
+    M = batch * OH * OW,   K = KH * KW * Cin,   N = Cout
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+from repro.core.analytical import GemmShape
+
+
+def conv_gemm(name: str, batch: int, h: int, w: int, cin: int, cout: int,
+              kh: int, kw: int, stride: int = 1, pad: int = 0,
+              groups: int = 1) -> List[GemmShape]:
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    return [GemmShape(m=batch * oh * ow, k=kh * kw * cin // groups,
+                      n=cout // groups, name=f"{name}.g{g}" if groups > 1 else name)
+            for g in range(groups)]
+
+
+def fc_gemm(name: str, batch: int, cin: int, cout: int) -> List[GemmShape]:
+    return [GemmShape(m=batch, k=cin, n=cout, name=name)]
+
+
+def alexnet(batch: int = 1) -> List[GemmShape]:
+    """AlexNet (Krizhevsky et al. 2012) with the original grouped conv2/4/5,
+    ~1.45 GOP/inference."""
+    return (
+        conv_gemm("conv1", batch, 227, 227, 3, 96, 11, 11, stride=4)
+        + conv_gemm("conv2", batch, 27, 27, 96, 256, 5, 5, pad=2, groups=2)
+        + conv_gemm("conv3", batch, 13, 13, 256, 384, 3, 3, pad=1)
+        + conv_gemm("conv4", batch, 13, 13, 384, 384, 3, 3, pad=1, groups=2)
+        + conv_gemm("conv5", batch, 13, 13, 384, 256, 3, 3, pad=1, groups=2)
+        + fc_gemm("fc6", batch, 256 * 6 * 6, 4096)
+        + fc_gemm("fc7", batch, 4096, 4096)
+        + fc_gemm("fc8", batch, 4096, 1000)
+    )
+
+
+def vgg16(batch: int = 1) -> List[GemmShape]:
+    cfg = [(64, 2, 224), (128, 2, 112), (256, 3, 56), (512, 3, 28), (512, 3, 14)]
+    layers: List[GemmShape] = []
+    cin = 3
+    idx = 1
+    for cout, reps, res in cfg:
+        for r in range(reps):
+            layers += conv_gemm(f"conv{idx}", batch, res, res, cin, cout, 3, 3, pad=1)
+            cin = cout
+            idx += 1
+    layers += fc_gemm("fc1", batch, 512 * 7 * 7, 4096)
+    layers += fc_gemm("fc2", batch, 4096, 4096)
+    layers += fc_gemm("fc3", batch, 4096, 1000)
+    return layers
+
+
+def _resnet(blocks_per_stage: List[int], batch: int) -> List[GemmShape]:
+    layers = conv_gemm("conv1", batch, 224, 224, 3, 64, 7, 7, stride=2, pad=3)
+    res = 56
+    cin = 64
+    for stage, blocks in enumerate(blocks_per_stage):
+        width = 64 * (2 ** stage)
+        cout = width * 4
+        for b in range(blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            in_res = res * stride
+            nm = f"s{stage+2}b{b+1}"
+            layers += conv_gemm(f"{nm}.c1", batch, in_res, in_res, cin, width, 1, 1, stride=stride)
+            layers += conv_gemm(f"{nm}.c2", batch, res, res, width, width, 3, 3, pad=1)
+            layers += conv_gemm(f"{nm}.c3", batch, res, res, width, cout, 1, 1)
+            if b == 0:
+                layers += conv_gemm(f"{nm}.proj", batch, in_res, in_res, cin, cout, 1, 1, stride=stride)
+            cin = cout
+        res //= 2
+    layers += fc_gemm("fc", batch, 2048, 1000)
+    return layers
+
+
+def resnet50(batch: int = 1) -> List[GemmShape]:
+    return _resnet([3, 4, 6, 3], batch)
+
+
+def resnet101(batch: int = 1) -> List[GemmShape]:
+    return _resnet([3, 4, 23, 3], batch)
+
+
+def resnet152(batch: int = 1) -> List[GemmShape]:
+    return _resnet([3, 8, 36, 3], batch)
+
+
+MODELS = {
+    "alexnet": alexnet,
+    "vgg16": vgg16,
+    "resnet50": resnet50,
+    "resnet101": resnet101,
+    "resnet152": resnet152,
+}
+
+
+def model_gops(name: str, batch: int = 1) -> float:
+    return sum(g.ops() for g in MODELS[name](batch)) * 1e-9

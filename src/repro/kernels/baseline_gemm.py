@@ -1,0 +1,63 @@
+"""Baseline systolic-array-style blocked GEMM as a Pallas TPU kernel.
+
+The comparison baseline (Fig. 1a PEs): a straightforward MXU-mapped blocked
+matmul with explicit BlockSpec VMEM tiling. Grid (M/bm, N/bn, K/bk), K
+innermost for in-VMEM accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(a_ref, b_ref, o_ref, *, acc_dtype):
+    k = pl.program_id(2)
+    a = a_ref[...].astype(acc_dtype)
+    b = b_ref[...].astype(acc_dtype)
+    if jnp.issubdtype(acc_dtype, jnp.integer):
+        part = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=acc_dtype)
+    else:
+        part = jnp.dot(a, b, preferred_element_type=acc_dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def baseline_gemm(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
+                  bk: int = 128, interpret: bool = True) -> Array:
+    """a: (M, K), b: (K, N) -> (M, N) in the accumulation dtype.
+
+    M, N, K must be multiples of the block sizes (ops.py pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    acc_dtype = (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
+                 else jnp.float32)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

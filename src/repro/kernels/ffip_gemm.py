@@ -1,0 +1,104 @@
+"""FFIP GEMM as a Pallas TPU kernel — Fig. 1c / Fig. 3 adapted to TPU.
+
+Faithful free-pipeline dataflow: the kernel consumes the weight *deltas*
+y (Eq. 9) rather than B, and reconstructs the g-term offsets by accumulating
+y along the output-column direction — exactly what the FFIP PE chain does,
+where each g register adds one y as the value hops to the next column's PE.
+
+Mapping to a blocked kernel: grid is (M/bm, K/bk, N/bn) with the N axis
+innermost. A VMEM scratch ``carry`` holds the running column prefix of y for
+the current (m, k) stripe; within a block the prefix is a cumsum. Thus
+B is never materialised in HBM — only y travels (the paper's §4.4 notes y can
+be precomputed and stored at 1 extra bit).
+
+The α row is computed in-kernel (the paper's extra MAC row, Fig. 3); β is
+reconstructed from the carried prefix (or pre-folded into bias, Eq. 15).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import fip
+
+Array = jax.Array
+
+
+def _kernel(a_ref, y_ref, o_ref, carry_ref, *, acc_dtype, fold_beta):
+    kk = pl.program_id(1)
+    nn = pl.program_id(2)
+    a = a_ref[...].astype(acc_dtype)            # (bm, bk)
+    y = y_ref[...].astype(acc_dtype)            # (bk, bn) weight deltas
+
+    @pl.when(nn == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    # Free-pipeline reconstruction: b_{k,j} = b_{k,j-1} + y_{k,j} (Eq. 8c/9).
+    b = carry_ref[...] + jnp.cumsum(y, axis=1)  # (bk, bn)
+    carry_ref[...] = b[:, -1:]                  # prefix for the next N block
+
+    # g terms (Eqs. 8a/8b): pair-swapped A plus the reconstructed offsets.
+    a_odd, a_evn = a[:, 0::2], a[:, 1::2]
+    b_odd, b_evn = b[0::2, :], b[1::2, :]
+    g1 = a_evn[:, :, None] + b_odd[None, :, :]  # g_{i,2k-1}
+    g2 = a_odd[:, :, None] + b_evn[None, :, :]  # g_{i,2k}
+    cross = jnp.sum(g1 * g2, axis=1)            # Eq. (7) product-sum
+    alpha = jnp.sum(a_odd * a_evn, axis=1)      # alpha MAC row (Fig. 3)
+    part = cross - alpha[:, None]
+    if not fold_beta:
+        beta = jnp.sum(b_odd * b_evn, axis=0)
+        part = part - beta[None, :]
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(kk != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "fold_beta"))
+def ffip_gemm_y(a: Array, y: Array, *, bm: int = 128, bn: int = 128,
+                bk: int = 64, interpret: bool = True,
+                fold_beta: bool = False) -> Array:
+    """FFIP GEMM from precomputed y deltas. a: (M, K), y: (K, N) -> (M, N)."""
+    m, k = a.shape
+    k2, n = y.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 2 == 0
+    acc_dtype = (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
+                 else jnp.float32)
+    # grid: N innermost so the carry sweeps columns for a fixed (m, k) stripe.
+    grid = (m // bm, k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype, fold_beta=fold_beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((bk, 1), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(a, y)
+
+
+def ffip_gemm(a: Array, b: Array, **kw) -> Array:
+    """Convenience: derive y from B (offline in deployment) then run FFIP.
+
+    y is kept in the accumulation dtype (int32 / f32): the paper stores y with
+    1 extra bit (§4.4) so the delta encoding is lossless; for bf16 weights the
+    f32 deltas play that role (bf16 deltas would make the column prefix-sum
+    reconstruction lossy).
+    """
+    y = fip.make_y(b)  # make_y already promotes to the accumulation dtype
+    return ffip_gemm_y(a, y, **kw)

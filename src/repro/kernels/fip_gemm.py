@@ -1,0 +1,76 @@
+"""FIP (Winograd 1968) GEMM as a Pallas TPU kernel — Fig. 1b adapted to TPU.
+
+TPU adaptation (DESIGN.md §2): the FIP PE trades half the multipliers for
+pre-adders. On TPU there is no MXU mapping for the (i,j)-coupled pre-add, so
+the kernel performs the halved-multiplication algebra on the VPU with explicit
+VMEM blocking: per (bm, bk, bn) tile it forms the two pre-add tensors
+(bm, bk/2, bn), multiplies elementwise, reduces over the pair axis, and
+accumulates cross − α_blk − β_blk into the output block. The α row of the
+paper's MXU (Fig. 3) corresponds to the in-kernel α_blk computation; β may be
+pre-folded into the bias by the caller (Eq. 15), in which case the kernel
+skips the β term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(a_ref, b_ref, o_ref, *, acc_dtype, fold_beta):
+    kk = pl.program_id(2)
+    a = a_ref[...].astype(acc_dtype)           # (bm, bk)
+    b = b_ref[...].astype(acc_dtype)           # (bk, bn)
+    a_odd, a_evn = a[:, 0::2], a[:, 1::2]      # a_{i,2k-1}, a_{i,2k}
+    b_odd, b_evn = b[0::2, :], b[1::2, :]      # b_{2k-1,j}, b_{2k,j}
+    # Eq. (2) cross term on this tile: the FIP PE pre-adds then multiplies.
+    t1 = a_odd[:, :, None] + b_evn[None, :, :]   # (bm, bk/2, bn)
+    t2 = a_evn[:, :, None] + b_odd[None, :, :]
+    cross = jnp.sum(t1 * t2, axis=1)             # (bm, bn)
+    alpha = jnp.sum(a_odd * a_evn, axis=1)       # Eq. (3), the alpha MAC row
+    part = cross - alpha[:, None]
+    if not fold_beta:
+        beta = jnp.sum(b_odd * b_evn, axis=0)    # Eq. (4)
+        part = part - beta[None, :]
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(kk != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "fold_beta"))
+def fip_gemm(a: Array, b: Array, *, bm: int = 128, bn: int = 128, bk: int = 64,
+             interpret: bool = True, fold_beta: bool = False) -> Array:
+    """a: (M, K), b: (K, N) -> (M, N) via Eq. (2). Blocks must divide shapes;
+    bk must be even (pairs). With ``fold_beta=True`` the caller is expected to
+    add ``fold_beta_into_bias(b)`` (Eq. 15) afterwards — the hardware's
+    free beta handling."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 2 == 0
+    acc_dtype = (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
+                 else jnp.float32)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype, fold_beta=fold_beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,95 @@
+"""Public jit'd wrappers over the Pallas GEMM kernels.
+
+Handles: leading batch dims, padding M/N/K to block multiples (K padding is
+exact for FIP/FFIP — zero rows of A and B contribute zero to cross/α/β),
+dtype policy (int8→int32 accumulation, bf16→f32), block-size autotuning for
+VMEM fit, and output slicing/casting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.baseline_gemm import baseline_gemm
+from repro.kernels.fip_gemm import fip_gemm
+from repro.kernels.ffip_gemm import ffip_gemm
+
+Array = jax.Array
+
+# VMEM budget per operand block (bytes) used by the block chooser. A v5e core
+# has ~16 MiB VMEM; the FIP cross tensor is (bm, bk/2, bn) so bk is the lever.
+_VMEM_BUDGET = 6 * 1024 * 1024
+
+
+def choose_blocks(m: int, n: int, k: int, algo: str,
+                  itemsize: int = 4) -> Tuple[int, int, int]:
+    bm = min(128, _round_up_pow2(m))
+    bn = min(128, _round_up_pow2(n))
+    if algo == "baseline":
+        bk = min(512, _round_up_pow2(k))
+    else:
+        # fit 3 x (bm, bk/2, bn) f32 tensors in budget
+        bk = 8
+        while (3 * bm * bn * (bk) // 2 * itemsize) <= _VMEM_BUDGET and bk < 256:
+            bk *= 2
+        bk //= 2
+        bk = max(2, min(bk, _round_up_pow2(k)))
+    return bm, bn, bk
+
+
+def _round_up_pow2(x: int) -> int:
+    p = 8
+    while p < x and p < 1024:
+        p *= 2
+    return p
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "interpret", "bm", "bn", "bk"))
+def matmul(a: Array, b: Array, *, algo: str = "ffip", interpret: bool = True,
+           bm: int = 0, bn: int = 0, bk: int = 0) -> Array:
+    """C = A @ B via the Pallas kernels. a: (..., M, K), b: (K, N).
+
+    Returns the result cast back to the promoted input dtype for floats and
+    int32 for integer inputs (hardware-accumulator semantics).
+    """
+    *batch, m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {k} vs {k2}")
+    a2 = a.reshape(-1, k) if batch else a
+    mm = a2.shape[0]
+
+    if not (bm and bn and bk):
+        bm, bn, bk = choose_blocks(mm, n, k, algo)
+
+    a2 = _pad_to(_pad_to(a2, 0, bm), 1, bk)
+    b2 = _pad_to(_pad_to(b, 0, bk), 1, bn)
+
+    if algo == "baseline":
+        out = baseline_gemm(a2, b2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    elif algo == "fip":
+        out = fip_gemm(a2, b2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    elif algo == "ffip":
+        out = ffip_gemm(a2, b2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    else:
+        raise ValueError(algo)
+
+    out = out[:mm, :n]
+    if batch:
+        out = out.reshape(*batch, m, n)
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return out  # int32 accumulator, caller rescales
+    return out.astype(jnp.result_type(a.dtype, b.dtype))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels. Thin re-exports of core.fip so the
+kernel tests have a single oracle import point (per-kernel allclose sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fip
+
+Array = jax.Array
+
+
+def matmul_ref(a: Array, b: Array, algo: str = "baseline") -> Array:
+    """Oracle GEMM in the accumulation dtype (f32 / int32)."""
+    if algo == "baseline":
+        return fip.baseline_matmul(a, b)
+    if algo == "fip":
+        return fip.fip_matmul(a, b)
+    if algo == "ffip":
+        return fip.ffip_matmul(a, b)
+    raise ValueError(algo)
+
+
+def ffip_scan_ref(a: Array, b: Array) -> Array:
+    """Dataflow-faithful FFIP oracle (explicit Eq. 8c column recurrence)."""
+    y = fip.make_y(b)
+    beta = fip.fip_beta(b)
+    return fip.ffip_matmul_scan(a, y, beta=beta)

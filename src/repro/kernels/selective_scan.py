@@ -1,0 +1,268 @@
+"""Mamba1 selective scan as a fused Pallas TPU kernel (inference paths).
+
+The pure-JAX chunked scan pays HBM round-trips for the (B, d_inner, N) state
+carry on every time step (launch/costs.py charges it; a real TPU pays it too
+once the carry exceeds registers). This kernel keeps the state in VMEM
+scratch across the whole sequence: per grid cell it streams (chunk, bd)
+blocks of x/dt and (chunk, N) blocks of B/C, runs the recurrence in VMEM, and
+writes y blocks — HBM traffic is exactly inputs+outputs.
+
+Forward-only paths use :func:`selective_scan`; training uses
+:func:`selective_scan_trainable`, whose custom VJP runs :func:`_bwd_kernel` —
+a reverse-time kernel that recomputes h within each chunk from checkpointed
+chunk-start states (stored by the fwd kernel) and carries the adjoint state
+in VMEM. Exact gradients for x/dt/B/C/A.
+
+Layout: grid (B, d_inner/bd, S/c) with the sequence dim innermost/sequential;
+scratch h: (bd, N) f32 persists across the S sweep for each (b, d-block).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hout_ref,
+            hstart_ref, h_scr, *, chunk, n_state):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)      # (bd, N)
+
+    hstart_ref[0, 0] = h_scr[...]                       # chunk-start checkpoint
+
+    x = x_ref[0].astype(jnp.float32)                    # (c, bd)
+    dt = dt_ref[0].astype(jnp.float32)                  # (c, bd)
+    bmat = b_ref[0].astype(jnp.float32)                 # (c, N)
+    cmat = c_ref[0].astype(jnp.float32)                 # (c, N)
+    a = a_ref[...].astype(jnp.float32)                  # (bd, N)
+
+    def step(t, carry):
+        h, y_acc = carry                                # h: (bd, N)
+        da = jnp.exp(dt[t][:, None] * a)                # (bd, N)
+        dbx = (dt[t] * x[t])[:, None] * bmat[t][None, :]
+        h = da * h + dbx
+        y_t = jnp.sum(h * cmat[t][None, :], axis=1)     # (bd,)
+        y_acc = jax.lax.dynamic_update_slice_in_dim(
+            y_acc, y_t[None, :], t, axis=0)
+        return h, y_acc
+
+    h, y = jax.lax.fori_loop(
+        0, chunk, step,
+        (h_scr[...], jnp.zeros((chunk, x.shape[1]), jnp.float32)))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _fin():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def selective_scan(x: Array, dt: Array, b: Array, c: Array, a: Array,
+                   h0: Array, *, chunk: int = 128, bd: int = 512,
+                   interpret: bool = True) -> Tuple[Array, Array]:
+    """x, dt: (B, S, di); b, c: (B, S, N); a: (di, N); h0: (B, di, N).
+
+    Returns (y (B,S,di), h_final (B,di,N), h_starts (B,S/chunk,di,N) —
+    chunk-start state checkpoints consumed by the bwd kernel). S % chunk and
+    di % bd must hold (callers pad; config shapes already align)."""
+    bt, s, di = x.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    bd = min(bd, di)
+    assert s % chunk == 0 and di % bd == 0
+    grid = (bt, di // bd, s // chunk)
+    y, h_fin, h_starts = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_state=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, t, d)),  # x
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, t, d)),  # dt
+            pl.BlockSpec((1, chunk, n), lambda b_, d, t: (b_, t, 0)),   # B
+            pl.BlockSpec((1, chunk, n), lambda b_, d, t: (b_, t, 0)),   # C
+            pl.BlockSpec((bd, n), lambda b_, d, t: (d, 0)),             # A
+            pl.BlockSpec((1, bd, n), lambda b_, d, t: (b_, d, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, t, d)),
+            pl.BlockSpec((1, bd, n), lambda b_, d, t: (b_, d, 0)),
+            pl.BlockSpec((1, 1, bd, n), lambda b_, d, t: (b_, t, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, s, di), x.dtype),
+            jax.ShapeDtypeStruct((bt, di, n), h0.dtype),
+            jax.ShapeDtypeStruct((bt, s // chunk, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, b, c, a, h0)
+    return y, h_fin, h_starts
+
+
+def _bwd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, hstart_ref, dy_ref,
+                dx_ref, ddt_ref, db_ref, dc_ref, da_ref, dh_scr, da_scr,
+                *, chunk):
+    """Reverse-time pass, seq grid dim pre-reversed by the index maps.
+
+    Per chunk: recompute h_t forward from the checkpoint into VMEM, then run
+    the adjoint recurrence dh_{t-1} = exp(dt_t A) dh_t backwards, emitting
+    dx/ddt (c,bd) and per-d-block partial dB/dC (c,N) (summed over d-blocks
+    outside the kernel)."""
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        dh_scr[...] = jnp.zeros_like(dh_scr)
+        da_scr[...] = jnp.zeros_like(da_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (c, bd)
+    dt = dt_ref[0].astype(jnp.float32)
+    bmat = b_ref[0].astype(jnp.float32)       # (c, N)
+    cmat = c_ref[0].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)        # (bd, N)
+    dy = dy_ref[0].astype(jnp.float32)        # (c, bd)
+    h_prev0 = hstart_ref[0, 0]                # (bd, N) state entering the chunk
+
+    c_len, bd = x.shape
+    n = a.shape[-1]
+
+    # forward recompute: store h_{t-1} (pre-step state) for every t in VMEM
+    def fwd(t, carry):
+        h, hprevs = carry
+        hprevs = jax.lax.dynamic_update_slice_in_dim(
+            hprevs, h[None], t, axis=0)
+        da = jnp.exp(dt[t][:, None] * a)
+        h = da * h + (dt[t] * x[t])[:, None] * bmat[t][None, :]
+        return h, hprevs
+
+    _, hprevs = jax.lax.fori_loop(
+        0, c_len, fwd, (h_prev0, jnp.zeros((c_len, bd, n), jnp.float32)))
+
+    def bwd(i, carry):
+        t = c_len - 1 - i
+        dh, dx, ddt, db, dc, dacc = carry
+        h_prev = hprevs[t]                            # (bd, N)
+        da = jnp.exp(dt[t][:, None] * a)
+        dbx_coef = (dt[t] * x[t])[:, None]            # (bd, 1)
+        h_t = da * h_prev + dbx_coef * bmat[t][None, :]
+        # y_t = <h_t, C_t>
+        dh_t = dh + dy[t][:, None] * cmat[t][None, :]
+        dc_t = jnp.sum(h_t * dy[t][:, None], axis=0)  # (N,) partial over bd
+        # dbx path
+        db_t = jnp.sum(dh_t * dbx_coef, axis=0)       # (N,)
+        dx_t = jnp.sum(dh_t * bmat[t][None, :], axis=1) * dt[t]
+        ddt_t = (jnp.sum(dh_t * bmat[t][None, :], axis=1) * x[t]
+                 + jnp.sum(dh_t * da * h_prev * a, axis=1))
+        dacc = dacc + dh_t * da * h_prev * dt[t][:, None]   # exact dA term
+        dh_next = da * dh_t
+        dx = jax.lax.dynamic_update_slice_in_dim(dx, dx_t[None], t, 0)
+        ddt = jax.lax.dynamic_update_slice_in_dim(ddt, ddt_t[None], t, 0)
+        db = jax.lax.dynamic_update_slice_in_dim(db, db_t[None], t, 0)
+        dc = jax.lax.dynamic_update_slice_in_dim(dc, dc_t[None], t, 0)
+        return dh_next, dx, ddt, db, dc, dacc
+
+    z2 = jnp.zeros((c_len, bd), jnp.float32)
+    zn = jnp.zeros((c_len, n), jnp.float32)
+    dh, dx, ddt, db, dc, dacc = jax.lax.fori_loop(
+        0, c_len, bwd, (dh_scr[...], z2, z2, zn, zn, da_scr[...]))
+    dh_scr[...] = dh
+    da_scr[...] = dacc
+    dx_ref[0] = dx.astype(dx_ref.dtype)
+    ddt_ref[0] = ddt.astype(ddt_ref.dtype)
+    db_ref[0, :, 0] = db.astype(db_ref.dtype)
+    dc_ref[0, :, 0] = dc.astype(dc_ref.dtype)
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _fin():
+        da_ref[0] = da_scr[...].astype(da_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def selective_scan_bwd(x, dt, b, c, a, h_starts, dy, *, chunk=128, bd=512,
+                       interpret=True):
+    """Adjoints (dx, ddt, db, dc, da) — exact; dh0 handled by the wrapper
+    (training starts from h0 = 0)."""
+    bt, s, di = x.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    bd = min(bd, di)
+    assert s % chunk == 0 and di % bd == 0
+    nd = di // bd
+    grid = (bt, nd, s // chunk)
+    rev = lambda t, total: total - 1 - t
+    nch = s // chunk
+    f32 = jnp.float32
+    dx, ddt, db_p, dc_p, da_p = pl.pallas_call(
+        functools.partial(_bwd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, nch - 1 - t, d)),
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, nch - 1 - t, d)),
+            pl.BlockSpec((1, chunk, n), lambda b_, d, t: (b_, nch - 1 - t, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, d, t: (b_, nch - 1 - t, 0)),
+            pl.BlockSpec((bd, n), lambda b_, d, t: (d, 0)),
+            pl.BlockSpec((1, 1, bd, n), lambda b_, d, t: (b_, nch - 1 - t, d, 0)),
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, nch - 1 - t, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, nch - 1 - t, d)),
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, t: (b_, nch - 1 - t, d)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, d, t: (b_, nch - 1 - t, d, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, d, t: (b_, nch - 1 - t, d, 0)),
+            pl.BlockSpec((1, bd, n), lambda b_, d, t: (b_, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, s, di), f32),
+            jax.ShapeDtypeStruct((bt, s, di), f32),
+            jax.ShapeDtypeStruct((bt, s, nd, n), f32),
+            jax.ShapeDtypeStruct((bt, s, nd, n), f32),
+            jax.ShapeDtypeStruct((bt, di, n), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32),
+                        pltpu.VMEM((bd, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, b, c, a, h_starts, dy)
+    return dx, ddt, db_p.sum(axis=2), dc_p.sum(axis=2), da_p.sum(axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def selective_scan_trainable(x, dt, b, c, a, h0, chunk=128, bd=512):
+    """Differentiable fused scan: y only (h_final not exposed — train path).
+
+    Note dA flows through the ddt-style term accumulated in the bwd kernel's
+    ddt computation via the chain rule below; h0 grad returned as zeros (train
+    always starts from h0 = 0)."""
+    y, _, _ = selective_scan(x, dt, b, c, a, h0, chunk=chunk, bd=bd)
+    return y
+
+
+def _sst_fwd(x, dt, b, c, a, h0, chunk, bd):
+    y, _, h_starts = selective_scan(x, dt, b, c, a, h0, chunk=chunk, bd=bd)
+    return y, (x, dt, b, c, a, h0, h_starts)
+
+
+def _sst_bwd(chunk, bd, res, dy):
+    x, dt, b, c, a, h0, h_starts = res
+    dx, ddt, db, dc, da = selective_scan_bwd(
+        x.astype(jnp.float32), dt.astype(jnp.float32), b.astype(jnp.float32),
+        c.astype(jnp.float32), a, h_starts, dy.astype(jnp.float32),
+        chunk=chunk, bd=bd)
+    dh0 = jnp.zeros_like(h0)   # training always starts from h0 = 0
+    return (dx.astype(x.dtype), ddt.astype(dt.dtype), db.astype(b.dtype),
+            dc.astype(c.dtype), da.astype(a.dtype), dh0)
+
+
+selective_scan_trainable.defvjp(_sst_fwd, _sst_bwd)

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+input_specs(arch, shape) gives the jit-lowerable argument tree for the cell's
+step function: train batches, prefill prompts, or decode steps with KV/SSM
+caches. Modality frontends are stubs: frames/patches enter as precomputed
+embedding specs (per the brief)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import build_model
+
+PyTree = Any
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.encoder is not None:
+        out["frames"] = sds((batch, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "vision":
+        out["patches"] = sds((batch, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    out.update(_frontend_specs(cfg, b))
+    return out
+
+
+def cache_specs_struct(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """decode: one new token against a seq_len cache. prefill: the full prompt."""
+    b, s = shape.global_batch, shape.seq_len
+    prefix = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    if shape.kind == "prefill":
+        out = {
+            "tokens": sds((b, s), jnp.int32),
+            "cache": cache_specs_struct(cfg, b, s + prefix),
+        }
+        out.update(_frontend_specs(cfg, b))
+        return out
+    # decode: cache of seq_len already-filled tokens, one token in flight
+    return {
+        "token": sds((b, 1), jnp.int32),
+        "cache": cache_specs_struct(cfg, b, s + prefix),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def params_specs_struct(cfg: ModelConfig) -> PyTree:
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def input_specs(arch: str, shape_name: str) -> Tuple[ModelConfig, ShapeConfig, Dict[str, Any]]:
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPE_BY_NAME[shape_name]
+    ok, why = configs.shape_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name}: {why}")
+    if shape.kind == "train":
+        return cfg, shape, train_batch_specs(cfg, shape)
+    return cfg, shape, serve_specs(cfg, shape)

@@ -1,0 +1,300 @@
+"""Attention variants: GQA (opt. sliding-window / local:global), MLA
+(DeepSeek-V2), and cross-attention (enc-dec). All projections go through the
+GEMM provider; score/context matmuls are activation-activation products (out
+of FIP scope — the paper's technique targets weight GEMMs on the MXU).
+
+Window convention: ``window`` is a (possibly traced) int32 scalar; 0 means
+full attention. Traced windows let a scan-over-layers carry per-layer
+local/global patterns (gemma3 5:1) without unrolling the stack.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+NEG_INF = -2.0e38
+
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": L.dense_init(k2, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": L.dense_init(k3, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": L.dense_init(k4, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _mask(q_pos: Array, k_pos: Array, window, causal: bool) -> Array:
+    """(..., Sq, Sk) boolean keep-mask from positions + window scalar."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    keep = (diff >= 0) if causal else jnp.ones_like(diff, dtype=bool)
+    windowed = jnp.logical_and(keep, diff < jnp.maximum(window, 1))
+    return jnp.where(window > 0, windowed, keep)
+
+
+def _flash_sdpa(q: Array, k: Array, v: Array, window, causal: bool) -> Array:
+    """Pallas flash path for full/prefill self- and cross-attention.
+
+    q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd). GQA via kv-head repeat (a view; the
+    kernel re-reads k/v blocks per q block anyway). window may be traced.
+    """
+    from repro.kernels.flash_attention import flash_attention
+    from repro.dist import context as dctx
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], k.shape[-1])
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], v.shape[-1])
+    w = window if window is not None else 0
+
+    mesh = dctx.get_mesh()
+    if mesh is None:
+        out = flash_attention(qt, kt, vt, w, causal, True)
+    else:
+        # shard_map over the fused (B*H) dim: flash is embarrassingly parallel
+        # there; each device runs the kernel on its local rows with ZERO
+        # collectives (without this, the SPMD partitioner gathers q/k/v around
+        # the interpret-mode kernel — §Perf starcoder2 iter-1 found 88TB of
+        # wire traffic).
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        bh = b * h
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        ladder = [batch_axes + (("model",) if "model" in mesh.axis_names else ()),
+                  batch_axes, ()]
+        axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+        spec_axes = next(axes for axes in ladder
+                         if bh % max(1, int(np.prod([axis_size[a] for a in axes]
+                                                    or [1]))) == 0)
+        sp = P(spec_axes if spec_axes else None, None, None)
+        out = shard_map(
+            lambda q_, k_, v_, w_: flash_attention(q_, k_, v_, w_, causal, True),
+            mesh=mesh, in_specs=(sp, sp, sp, P()), out_specs=sp,
+            check_rep=False,
+        )(qt, kt, vt, jnp.asarray(w, jnp.int32))
+    dv = out.shape[-1]   # MLA: value dim differs from q/k head dim
+    return out.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)
+
+
+def _sdpa(q: Array, k: Array, v: Array, keep: Optional[Array]) -> Array:
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd). GQA via head groups."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    q = q.reshape(b, sq, kv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    if keep is not None:
+        scores = jnp.where(keep[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def gqa_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
+              window=0, rope_theta=None, causal: bool = True,
+              cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
+              prefill: bool = False) -> Tuple[Array, Optional[dict]]:
+    """Full/prefill when cache is None; single-step decode when cache given.
+
+    cache = {"k": (B, S_max, KV, hd), "v": ...}; cache_pos: scalar int32 —
+    the number of tokens already in the cache (q is written at that offset).
+    """
+    b, s, d = x.shape
+    hd = cfg.hd
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    q = L.dense(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = L.dense(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = L.dense(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = L.apply_rope(q, positions, theta)
+    k = L.apply_rope(k, positions, theta)
+
+    if cache is None:
+        if cfg.attention_impl == "flash":
+            out = _flash_sdpa(q, k, v, window, causal)
+        else:
+            keep = _mask(positions if positions.ndim == 2 else positions[None, :],
+                         positions if positions.ndim == 2 else positions[None, :],
+                         window, causal)
+            if keep.ndim == 2:
+                keep = keep[None]
+            out = _sdpa(q, k, v, keep)
+        new_cache = None
+    elif prefill and cfg.attention_impl == "flash":
+        # prefill into an EMPTY cache: attention over the prompt == flash
+        # self-attention; k/v written at offset 0 (32k cells never touch an
+        # (S,S) score tensor this way — §Perf)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        out = _flash_sdpa(q, k, v, window, causal)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        # decode: write this step's k/v at cache_pos, attend over the cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        s_max = k_cache.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        valid = k_pos[None, :] < (cache_pos + s)
+        q_pos = positions if positions.ndim == 2 else positions[None, :]
+        keep = _mask(q_pos, k_pos[None, :], window, causal) & valid[:, None, :]
+        out = _sdpa(q, k_cache, v_cache, keep)
+        new_cache = {"k": k_cache, "v": v_cache}
+    return L.dense(out.reshape(b, s, cfg.n_heads * hd), p["wo"]), new_cache
+
+
+# --- MLA (DeepSeek-V2) ------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wq": L.dense_init(k1, d, h * (m.nope_head_dim + m.rope_head_dim), dtype),
+        "w_dkv": L.dense_init(k2, d, m.kv_lora_rank, dtype),    # compress
+        "w_kr": L.dense_init(k3, d, m.rope_head_dim, dtype),    # shared rope key
+        "w_ukv": L.dense_init(k4, m.kv_lora_rank,
+                              h * (m.nope_head_dim + m.v_head_dim), dtype),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dtype),
+        "wo": L.dense_init(k5, h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_kv(p, c_kv: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    m = cfg.mla
+    b, s, _ = c_kv.shape
+    kv = L.dense(c_kv, p["w_ukv"]).reshape(b, s, cfg.n_heads,
+                                           m.nope_head_dim + m.v_head_dim)
+    return kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+
+
+def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
+              window=0, cache: Optional[dict] = None,
+              cache_pos: Optional[Array] = None,
+              prefill: bool = False) -> Tuple[Array, Optional[dict]]:
+    """MLA: the KV cache stores only (c_kv, k_rope) — rank-512+64 per token.
+
+    cache = {"c_kv": (B, S_max, r), "k_rope": (B, S_max, rope_hd)}.
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q = L.dense(x, p["wq"]).reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = L.rmsnorm(L.dense(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(L.dense(x, p["w_kr"])[:, :, None, :], positions,
+                          cfg.rope_theta)  # (B,S,1,rope_hd)
+
+    if cache is None or (prefill and cfg.attention_impl == "flash"):
+        k_nope, v = _mla_kv(p, c_kv, cfg)
+        kr = k_rope
+        kv_positions = positions if positions.ndim == 2 else positions[None, :]
+        q_positions = kv_positions
+        valid = None
+        new_cache = None
+        if cache is not None:   # prefill: write compressed cache, flash attn
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_pos, axis=1),
+                "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+                    cache_pos, axis=1),
+            }
+        if cfg.attention_impl == "flash":
+            # PERF (§Perf deepseek iter-1): flash for MLA — concat nope+rope
+            # into q'/k' (d=192) with dv=128 values; no (S,S) scores in HBM.
+            q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr, (*k_nope.shape[:3], m.rope_head_dim))],
+                axis=-1)
+            out = _flash_sdpa(q_full, k_full, v, 0, True)
+            out = out.reshape(b, s, h * m.v_head_dim)
+            return L.dense(out, p["wo"]), new_cache
+    else:
+        # PERF (§Perf beyond-paper, deepseek decode): ABSORBED MLA decode.
+        # Instead of decompressing k/v for the whole cache per token
+        # (S*H*(nope+v)*r flops + a (B,S,H,256) transient -> useful-flops
+        # ratio 0.00 in the baseline roofline), absorb W_uk into the query
+        # and W_uv into the context: attention runs entirely in the rank-r
+        # latent space against the compressed cache.
+        c_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_pos, axis=1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+            cache_pos, axis=1)
+        s_max = c_cache.shape[1]
+        w_ukv = p["w_ukv"]["w"].reshape(m.kv_lora_rank, h,
+                                        m.nope_head_dim + m.v_head_dim)
+        w_uk = w_ukv[..., :m.nope_head_dim]            # (r, H, nope)
+        w_uv = w_ukv[..., m.nope_head_dim:]            # (r, H, v)
+        q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)   # absorbed query
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(jnp.float32),
+                             c_cache.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                               r_cache.astype(jnp.float32)))
+        scores = scores / ((m.nope_head_dim + m.rope_head_dim) ** 0.5)
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(s_max, dtype=jnp.int32)[None], (b, s_max))
+        q_positions = positions if positions.ndim == 2 else positions[None, :]
+        keep = _mask(q_positions, kv_positions, window, True) \
+            & (kv_positions < (cache_pos + s))[:, None, :]
+        scores = jnp.where(keep[:, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(c_cache.dtype), c_cache)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)   # absorbed values
+        out = out.reshape(b, s, h * m.v_head_dim)
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+        return L.dense(out, p["wo"]), new_cache
+
+    scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsxd->bhqs", q_rope,
+                           jnp.broadcast_to(kr, (*kr.shape[:2], 1, kr.shape[-1])),
+                           preferred_element_type=jnp.float32))
+    scores = scores / ((m.nope_head_dim + m.rope_head_dim) ** 0.5)
+    keep = _mask(q_positions, kv_positions, window, True)
+    if valid is not None:
+        keep = keep & valid[:, None, :]
+    scores = jnp.where(keep[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return L.dense(out, p["wo"]), new_cache
+
+
+# --- Cross-attention (whisper decoder) ---------------------------------------
+
+def cross_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, d, cfg.n_heads * hd, dtype),
+        "wk": L.dense_init(k2, d, cfg.n_kv_heads * hd, dtype),
+        "wv": L.dense_init(k3, d, cfg.n_kv_heads * hd, dtype),
+        "wo": L.dense_init(k4, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_apply(p: dict, x: Array, enc: Array, cfg: ModelConfig) -> Array:
+    """x: (B,S,d) queries over encoder states enc: (B,T,d). No mask."""
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = L.dense(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = L.dense(enc, p["wk"]).reshape(b, enc.shape[1], cfg.n_kv_heads, hd)
+    v = L.dense(enc, p["wv"]).reshape(b, enc.shape[1], cfg.n_kv_heads, hd)
+    out = _sdpa(q, k, v, None)
+    return L.dense(out.reshape(b, s, cfg.n_heads * hd), p["wo"])

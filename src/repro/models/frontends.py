@@ -1,0 +1,24 @@
+"""Modality frontend STUBS (per the brief: audio/vision entries specify the
+transformer backbone only; input_specs provides precomputed frame/patch
+embeddings). These helpers generate synthetic stub embeddings for tests and
+document the real frontends they stand in for."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frames_stub(key, batch: int, cfg: ModelConfig, n_frames: int = 0):
+    """Whisper: stands in for the 2x conv1d + GELU mel-spectrogram frontend
+    (stride-2 conv halves 3000 mel frames to 1500)."""
+    n = n_frames or cfg.encoder.n_frames
+    return jax.random.normal(key, (batch, n, cfg.d_model), cfg.dtype) * 0.02
+
+
+def vision_patches_stub(key, batch: int, cfg: ModelConfig, n_patches: int = 0):
+    """Pixtral: stands in for the Pixtral-ViT patch encoder + adapter
+    (1024x1024 image -> 16x16 patches -> adapter to backbone d_model)."""
+    n = n_patches or cfg.frontend_tokens
+    return jax.random.normal(key, (batch, n, cfg.d_model), cfg.dtype) * 0.02

@@ -1,0 +1,109 @@
+"""Primitive layers. Every matmul routes through the GEMM provider (core.gemm)
+so the paper's FIP/FFIP arithmetic can be swapped in under any model."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import gemm
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: float = 1.0) -> dict:
+    std = scale / (d_in ** 0.5)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(x: Array, p: dict) -> Array:
+    """x: (..., d_in) @ w: (d_in, d_out). Routed through the GEMM provider."""
+    *lead, d_in = x.shape
+    out = gemm(x.reshape(-1, d_in), p["w"])
+    out = out.reshape(*lead, -1)
+    if "b" in p:
+        out = out + p["b"]
+    return out
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x: Array, p: dict, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x: Array, p: dict, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(tokens: Array, p: dict) -> Array:
+    return p["table"][tokens]
+
+
+def unembed(x: Array, p: dict) -> Array:
+    """Logits via tied table: (..., d) @ (d, vocab)."""
+    *lead, d = x.shape
+    out = gemm(x.reshape(-1, d), p["table"].T)
+    return out.reshape(*lead, -1)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "up": dense_init(k1, d, d_ff, dtype),
+        "gate": dense_init(k2, d, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(x: Array, p: dict, act: str = "silu") -> Array:
+    """Gated MLP (SwiGLU-style; universal across the assigned archs)."""
+    return dense(act_fn(act)(dense(x, p["gate"])) * dense(x, p["up"]), p["down"])
+
+
+# --- RoPE ------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,). theta may be a traced scalar
+    (gemma3 passes per-layer theta through the layer scan)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

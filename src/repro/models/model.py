@@ -1,0 +1,96 @@
+"""Public model API: init / train loss (chunked CE) / prefill / decode."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+PyTree = Any
+
+
+def chunked_cross_entropy(params, hidden: Array, labels: Array,
+                          cfg: ModelConfig, *, chunk: int = 512) -> Array:
+    """CE over the vocab without materializing (B,S,V) f32 logits at once.
+
+    Scans over sequence chunks; each chunk computes (B,c,V) logits, its CE,
+    and discards them — essential for vocab=262144 archs (gemma3)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s  # fallback: shapes in the grid keep s % 512 == 0
+    n_chunks = s // chunk
+    h = hidden.reshape(b, n_chunks, chunk, d)
+    y = labels.reshape(b, n_chunks, chunk)
+
+    def body(acc, inp):
+        hc, yc = inp                                    # (B,c,d), (B,c)
+        logits = T.logits_fn(params, hc, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (jnp.moveaxis(h, 1, 0), jnp.moveaxis(y, 1, 0)))
+    return total / (b * s)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ------------------------------------------------------------
+    def init(self, key) -> PyTree:
+        return T.init_params(key, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cache = T.init_cache(self.cfg, batch, max_len)
+        if self.cfg.encoder is not None:
+            t = self.cfg.encoder.n_frames
+            cache["cross_kv"] = {
+                "k": jnp.zeros((self.cfg.n_layers, batch, t,
+                                self.cfg.n_kv_heads, self.cfg.hd), self.cfg.dtype),
+                "v": jnp.zeros((self.cfg.n_layers, batch, t,
+                                self.cfg.n_kv_heads, self.cfg.hd), self.cfg.dtype),
+            }
+        return cache
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Array]) -> Array:
+        """batch: tokens (B,S), labels (B,S), + frames/patches stubs."""
+        hidden, aux, _ = T.forward(
+            params, batch["tokens"], self.cfg,
+            frames=batch.get("frames"), patches=batch.get("patches"))
+        ce = chunked_cross_entropy(params, hidden, batch["labels"], self.cfg)
+        return ce + aux
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, tokens: Array, cache: dict,
+                frames: Optional[Array] = None,
+                patches: Optional[Array] = None) -> Tuple[dict, Array]:
+        """Fill the cache with a prompt; returns (cache, last-token logits)."""
+        hidden, _, new_cache = T.forward(
+            params, tokens, self.cfg, frames=frames, patches=patches,
+            caches=cache, cache_pos=jnp.zeros((), jnp.int32),
+            is_prefill=True)
+        logits = T.logits_fn(params, hidden[:, -1:], self.cfg)
+        return new_cache, logits[:, 0]
+
+    def decode_step(self, params, token: Array, cache: dict, pos: Array,
+                    ) -> Tuple[dict, Array]:
+        """One decode step. token: (B,1); pos: scalar count of cached tokens."""
+        hidden, _, new_cache = T.forward(
+            params, token, self.cfg, caches=cache, cache_pos=pos)
+        logits = T.logits_fn(params, hidden, self.cfg)
+        return new_cache, logits[:, 0]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch is the MaxText/Mesh-TF style position-in-expert scatter (no (T,E,C)
+one-hot einsum tensor), shardable two ways (cfg.moe.partition):
+  * "expert": expert axis sharded over `model` (EP) — DeepSeek (64 experts);
+  * "ffn": d_ff of every expert sharded over `model` (TP-in-expert) — Mixtral
+    (8 experts < 16-way model axis).
+Aux load-balancing loss is the switch-transformer form.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    ke1, ke2, ke3 = jax.random.split(k_e, 3)
+    e = m.n_experts
+    std = 1.0 / (d ** 0.5)
+    p = {
+        "router": L.dense_init(k_r, d, e, dtype),
+        "w_gate": (jax.random.normal(ke1, (e, d, m.d_ff_expert), jnp.float32) * std).astype(dtype),
+        "w_up": (jax.random.normal(ke2, (e, d, m.d_ff_expert), jnp.float32) * std).astype(dtype),
+        "w_down": (jax.random.normal(ke3, (e, m.d_ff_expert, d), jnp.float32)
+                   * (1.0 / (m.d_ff_expert ** 0.5))).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = L.mlp_init(k_s, d, m.d_ff_expert * m.n_shared, dtype)
+    return p
+
+
+def moe_apply(p: dict, x: Array, *, cfg: ModelConfig,
+              ) -> Tuple[Array, Array]:
+    """x: (B,S,d) -> (out, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = L.dense(xt, p["router"]).astype(jnp.float32)      # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)      # (T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # capacity-bounded positions: flatten (T,k) assignments in token order
+    flat_e = expert_idx.reshape(-1)                            # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot             # (T*k,E)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                  # (T*k,)
+    capacity = int(t * m.top_k * m.capacity_factor / m.n_experts) + 1
+    keep = pos < capacity
+
+    x_rep = jnp.repeat(xt, m.top_k, axis=0)                    # (T*k,d)
+    buf = jnp.zeros((m.n_experts, capacity, d), x.dtype)
+    buf = buf.at[flat_e, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], x_rep, 0))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # (E,C,d)
+
+    gathered = out_buf[flat_e, jnp.where(keep, pos, 0)]        # (T*k,d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.sum(weighted.reshape(t, m.top_k, d), axis=1)
+
+    if m.n_shared:
+        out = out + L.mlp(xt, p["shared"], cfg.act)
+
+    # switch-style aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], m.n_experts), axis=0)
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,124 @@
+"""AdamW + schedules (incl. MiniCPM's WSD) + clipping + optional int8
+error-feedback gradient compression for cross-pod all-reduce.
+
+Pure-pytree implementation (no optax dependency): opt_state mirrors params and
+shards identically (ZeRO-style: the specs applied to params apply to m/v)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1         # WSD: final fraction of steps in decay
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Warmup -> (cosine | WSD-stable+decay | const)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        mult = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM): stable at peak, then sharp decay tail
+        decay_start = 1.0 - cfg.decay_frac
+        d = jnp.clip((t - decay_start) / cfg.decay_frac, 0.0, 1.0)
+        mult = jnp.where(t < decay_start, 1.0,
+                         cfg.min_lr_frac ** d)       # exponential-style tail
+    else:
+        mult = jnp.ones_like(t)
+    return cfg.lr * warm * mult
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState, params: PyTree,
+           ) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_ = cfg.b1 * m + (1 - cfg.b1) * g
+        v_ = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_ / b1t
+        vh = v_ / b2t
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_, v_
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod all-reduce trick)
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization of a gradient."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads: PyTree, error: PyTree) -> Tuple[PyTree, PyTree, PyTree]:
+    """Error-feedback compression: quantize (g + e); new error = input - deq.
+
+    Returns (quantized, scales, new_error). Used on the cross-pod reduction
+    path; the residual error re-enters the next step so the compression is
+    unbiased over time (standard EF-SGD argument)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = compress_int8(x)
+        return q, s, x - decompress_int8(q, s)
+    out = jax.tree.map(one, grads, error)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    e = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, e

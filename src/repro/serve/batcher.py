@@ -1,0 +1,129 @@
+"""Serving runtime: slot-based continuous batching over prefill/decode steps.
+
+A fixed pool of B slots; requests occupy a slot, prefill writes their prompt
+into the slot's cache region, then all active slots decode in lockstep (one
+jitted decode per step — the dry-run's ``decode_*`` cells are exactly this
+step). Finished slots (EOS or max_tokens) are immediately refilled from the
+queue — the standard continuous-batching scheme (vLLM-style, simplified to
+fixed-shape slots so XLA shapes stay static).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: never
+    out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                  # tokens currently in this slot's cache rows
+    remaining: int = 0
+
+
+class BatchServer:
+    """Single-host reference implementation (the multi-pod serve path lowers
+    the same decode step through launch/dryrun.py)."""
+
+    def __init__(self, model: Model, *, batch_slots: int, max_len: int,
+                 greedy: bool = True):
+        self.model = model
+        self.b = batch_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        # per-slot prefill: batch-1 prefill into the slot's cache rows
+        self._prefill_one = jax.jit(self._prefill_impl, donate_argnums=(2,))
+
+    def _prefill_impl(self, params, tokens, cache, slot_idx):
+        sub = jax.tree.map(lambda c: c, cache)  # alias; updates sliced per slot
+
+        # run a batch-1 forward and scatter its cache rows into slot_idx
+        one_cache = self.model.init_cache(1, self.max_len)
+        new_one, logits = self.model.prefill(params, tokens, one_cache)
+
+        def put(full, one):
+            # batch axis: where the full cache has b slots and the batch-1
+            # cache has 1 (never confuses a stacked layer dim that equals b)
+            axis = next(i for i, (sf, so) in
+                        enumerate(zip(full.shape, one.shape))
+                        if sf == self.b and so == 1)
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slot_idx
+            return full.at[tuple(idx)].set(one.squeeze(axis=axis).astype(full.dtype))
+
+        return jax.tree.map(put, sub, new_one), logits
+
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.put(req)
+
+    def _admit(self, params):
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                try:
+                    req = self.queue.get_nowait()
+                except queue.Empty:
+                    return
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                self.cache, logits = self._prefill_one(
+                    params, toks, self.cache, i)
+                first = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(first)
+                slot.req = req
+                slot.pos = len(req.prompt) + 1
+                slot.remaining = req.max_new_tokens - 1
+
+    def step(self, params) -> int:
+        """One lockstep decode over all active slots; returns #active."""
+        self._admit(params)
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+        last = np.zeros((self.b, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slots[i].req.out_tokens[-1]
+        # NOTE: slots decode against their own pos; we use per-slot masks via
+        # max pos — positions beyond a slot's pos hold zeros (masked by cache
+        # validity). Single shared pos = max(pos) keeps shapes static.
+        pos = max(self.slots[i].pos for i in active)
+        self.cache, logits = self._decode(params, jnp.asarray(last),
+                                          self.cache,
+                                          jnp.asarray(pos, jnp.int32))
+        for i in active:
+            slot = self.slots[i]
+            nxt = int(jnp.argmax(logits[i]))
+            slot.req.out_tokens.append(nxt)
+            slot.pos += 1
+            slot.remaining -= 1
+            if slot.remaining <= 0 or nxt == slot.req.eos_id:
+                slot.req = None   # slot freed -> next _admit refills it
+        return len(active)
+
+    def run_until_drained(self, params, *, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_steps):
+            for s in self.slots:
+                if s.req is not None:
+                    seen[s.req.rid] = s.req
+            if self.step(params) == 0 and self.queue.empty():
+                break
+        return list(seen.values())

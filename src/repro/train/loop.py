@@ -1,0 +1,80 @@
+"""Resumable training loop: data + step + checkpoints + watchdog + metrics."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import make_pipeline
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.train.step import TrainConfig, make_train_step
+from repro.train.watchdog import StepWatchdog, WatchdogConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+
+
+def train(model: Model, *, loop_cfg: LoopConfig,
+          train_cfg: Optional[TrainConfig] = None,
+          log_fn: Callable[[Dict], None] = lambda m: None,
+          ) -> Dict[str, Any]:
+    """Runs (or resumes) training; returns final params + history."""
+    tcfg = train_cfg or TrainConfig()
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+
+    params = model.init(jax.random.PRNGKey(loop_cfg.seed))
+    opt_state = adamw.init(params)
+    start_step = 0
+
+    mgr = None
+    if loop_cfg.ckpt_dir:
+        mgr = CheckpointManager(loop_cfg.ckpt_dir)
+        if mgr.latest_step() is not None:
+            (params, opt_state), extra = mgr.restore((params, opt_state))
+            start_step = int(extra.get("data_step", mgr.latest_step()))
+
+    pipe = make_pipeline(model.cfg, loop_cfg.global_batch, loop_cfg.seq_len,
+                         seed=loop_cfg.seed, start_step=start_step)
+    dog = StepWatchdog(WatchdogConfig())
+    history = []
+    try:
+        t_prev = time.monotonic()
+        for _ in range(start_step, loop_cfg.total_steps):
+            data_step, batch = next(pipe)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            now = time.monotonic()
+            dog.observe(data_step, now - t_prev)
+            t_prev = now
+            if data_step % loop_cfg.log_every == 0 or \
+                    data_step == loop_cfg.total_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["data_step"] = data_step
+                history.append(m)
+                log_fn(m)
+            if mgr is not None and loop_cfg.ckpt_every and \
+                    (data_step + 1) % loop_cfg.ckpt_every == 0:
+                mgr.save(data_step + 1, (params, opt_state),
+                         extra={"data_step": data_step + 1})
+    finally:
+        pipe.close()
+        if mgr is not None:
+            mgr.wait()
+    return dict(params=params, opt_state=opt_state, history=history,
+                straggler_events=dog.events)

@@ -1,0 +1,73 @@
+"""Train-step factory: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation and donated buffers."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatch: int = 0        # 0 = no accumulation; else per-step microbatch
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if not tcfg.microbatch:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # gradient accumulation over microbatches along the batch dim
+        b = batch["tokens"].shape[0]
+        mb = tcfg.microbatch
+        n = b // mb
+        assert n * mb == b, "microbatch must divide batch"
+
+        def body(carry, idx):
+            acc, loss_acc = carry
+            sub = {k: jax.lax.dynamic_slice_in_dim(v, idx * mb, mb, 0)
+                   for k, v in batch.items()}
+            l, g = jax.value_and_grad(loss_fn)(params, sub)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, loss_acc + l), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zero, jnp.zeros(())),
+                                       jnp.arange(n))
+        return lsum / n, jax.tree.map(lambda g: g / n, gsum)
+
+    def step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        new_params, new_state = adamw.update(tcfg.optimizer, grads, opt_state,
+                                             params)
+        metrics = {
+            "loss": loss,
+            "grad_norm": adamw.global_norm(grads),
+            "lr": adamw.schedule_lr(tcfg.optimizer, new_state.step),
+            "step": new_state.step,
+        }
+        return new_params, new_state, metrics
+
+    return step
+
+
+def make_serve_step(model: Model):
+    """Returns decode(params, token, cache, pos) -> (cache, logits)."""
+
+    def serve_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    return serve_step

@@ -1,0 +1,172 @@
+"""Distribution-layer tests: sharding rules, cost model, HLO collective parser,
+and a real multi-device pjit train step (8 host devices via subprocess-free
+check when available)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.dist import sharding as shd
+from repro.launch import costs, roofline
+from repro.launch.inputs import params_specs_struct
+
+
+def make_mesh_2d(data=2, model=2):
+    n = jax.device_count()
+    if n < data * model:
+        pytest.skip(f"needs {data * model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def test_param_specs_divisibility_guard():
+    """No rule ever assigns an axis that does not divide the dim."""
+    mesh16 = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # emulate 16x16 shapes by checking with the real production mesh object is
+    # impossible on 1 device; instead check the rule function directly.
+    from repro.dist.sharding import _match_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:  # noqa
+            shape = (16, 16)
+
+    # gemma3: 8 q-heads -> wq out dim 2048 divisible, KV cache kv=4 not
+    spec = _match_spec("layers/attn/wq/w", (34, 2560, 2048), FakeMesh, "expert")
+    assert spec == P(None, "data", "model")
+    # a dim of 8 on a 16-way axis must stay unsharded
+    spec = _match_spec("layers/attn/wq/b", (34, 8), FakeMesh, "expert")
+    assert spec == P(None, None)
+
+
+def test_param_specs_cover_all_archs():
+    """Every leaf of every arch gets a spec; dims always divisible."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:  # noqa
+            shape = (16, 16)
+
+    axis_size = {"data": 16, "model": 16}
+    for arch in sorted(configs.ARCHS):
+        cfg = configs.get_config(arch)
+        params = params_specs_struct(cfg)
+        specs = shd.param_specs(params, FakeMesh,
+                                moe_partition=cfg.moe.partition if cfg.moe else "expert")
+        leaves = jax.tree_util.tree_leaves_with_path(params)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves) == len(spec_leaves)
+        for (path, leaf), spec in zip(leaves, spec_leaves):
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                assert leaf.shape[dim] % axis_size[ax] == 0, \
+                    (arch, jax.tree_util.keystr(path), leaf.shape, spec)
+
+
+def test_moe_partition_modes_differ():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:  # noqa
+            shape = (16, 16)
+
+    cfg = configs.get_config("deepseek-v2-lite-16b")
+    params = params_specs_struct(cfg)
+    s_expert = shd.param_specs(params, FakeMesh, moe_partition="expert")
+    s_ffn = shd.param_specs(params, FakeMesh, moe_partition="ffn")
+    def get(t):  # first w_gate spec
+        return t["layers"]["ffn"]["w_gate"]
+    assert get(s_expert)[1] == "model"       # (L, E, d, f): E sharded
+    assert get(s_ffn)[3] == "model"          # f sharded
+
+
+def test_pjit_train_step_multi_device():
+    """Real sharded train step on all host devices (data-parallel)."""
+    n = jax.device_count()
+    if n < 2:
+        pytest.skip("single device")
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    cfg = configs.smoke_config(configs.get_config("minicpm-2b"))
+    from repro.models.model import build_model
+    from repro.optim import adamw
+    from repro.train.step import TrainConfig, make_train_step
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    pspecs = shd.param_specs(params, mesh)
+    batch = {
+        "tokens": jnp.zeros((2 * n, 16), jnp.int32),
+        "labels": jnp.zeros((2 * n, 16), jnp.int32),
+    }
+    bspecs = shd.data_specs(batch, mesh)
+    step = jax.jit(make_train_step(model, TrainConfig()),
+                   in_shardings=(shd.to_named(pspecs, mesh),
+                                 shd.to_named(adamw.AdamWState(
+                                     step=P(), m=pspecs, v=pspecs), mesh),
+                                 shd.to_named(bspecs, mesh)))
+    with mesh:
+        p2, o2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+# --- cost model ---------------------------------------------------------------
+
+def test_jaxpr_cost_scan_multiplies_trip_count():
+    def body_mm(a, b):
+        def f(x, _):
+            return x @ b, None
+        out, _ = jax.lax.scan(f, a, None, length=7)
+        return out
+
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c1 = costs.fn_cost(lambda a, b: a @ b, a, b)
+    c7 = costs.fn_cost(body_mm, a, b)
+    assert c7.flops == pytest.approx(7 * c1.flops, rel=0.05)
+
+
+def test_jaxpr_cost_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 16), jnp.float32)
+    c = costs.fn_cost(lambda a, b: a @ b, a, b)
+    assert c.flops == 2 * 32 * 128 * 16
+
+
+# --- HLO collective parser ------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+
+%while_body.1 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+
+%while_cond.1 (p: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(30)
+  %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[256]) -> f32[256] {
+  %ag = f32[256]{0} all-gather(%a), replica_groups=[2,8]<=[16], dimensions={0}
+  %w = (s32[], f32[128]) while(%t), condition=%while_cond.1, body=%while_body.1
+}
+"""
+
+
+def test_collective_parser_while_aware():
+    stats = roofline.collective_bytes(HLO_SAMPLE)
+    # all-gather once: 256*4 bytes * (8-1)/8
+    assert stats.counts["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == pytest.approx(256 * 4 * 7 / 8)
+    # all-reduce inside while x30 trips: 2*128*4*(3/4) each
+    assert stats.counts["all-reduce"] == 30
+    assert stats.bytes_by_kind["all-reduce"] == pytest.approx(30 * 2 * 128 * 4 * 3 / 4)
+
+
+def test_roofline_fraction_definition():
+    stats = roofline.CollectiveStats(counts={}, bytes_by_kind={})
+    r = roofline.roofline_report(197e12 * 256, 0.0, stats, 256)
+    assert r["roofline_fraction"] == pytest.approx(1.0)   # pure compute = 1.0
+    assert r["bottleneck"] == "compute_s"

@@ -1,0 +1,156 @@
+"""Unit + property tests for the FIP/FFIP algebra (paper §3, incl. §3.2.1 proof)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fip
+
+
+def rand(key, shape, dtype=jnp.float32, lo=-8, hi=8):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, lo, hi, dtype=dtype)
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 6), (16, 32, 16), (1, 2, 1), (7, 10, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_fip_equals_baseline(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = rand(ka, (m, k), dtype)
+    b = rand(kb, (k, n), dtype)
+    want = fip.baseline_matmul(a, b)
+    got = fip.fip_matmul(a, b)
+    if dtype == jnp.int32:
+        np.testing.assert_array_equal(got, want)   # bit-exact for ints
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 6), (16, 32, 16), (3, 6, 9)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_ffip_equals_baseline(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(1))
+    a = rand(ka, (m, k), dtype)
+    b = rand(kb, (k, n), dtype)
+    want = fip.baseline_matmul(a, b)
+    got = fip.ffip_matmul(a, b)
+    if dtype == jnp.int32:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_ffip_scan_dataflow_matches():
+    """The literal Eq.(7)-(9) column recurrence (hardware dataflow) is exact."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(2))
+    a = rand(ka, (12, 16), jnp.int32)
+    b = rand(kb, (16, 10), jnp.int32)
+    y = fip.make_y(b)
+    got = fip.ffip_matmul_scan(a, y, beta=fip.fip_beta(b))
+    np.testing.assert_array_equal(got, a @ b)
+
+
+def test_y_roundtrip():
+    b = rand(jax.random.PRNGKey(3), (16, 10), jnp.int32)
+    np.testing.assert_array_equal(fip.y_to_b(fip.make_y(b)), b)
+
+
+def test_beta_folding():
+    """Eqs. (15)/(16): subtracting beta via bias is exact."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(4))
+    a = rand(ka, (8, 12), jnp.int32)
+    b = rand(kb, (12, 6), jnp.int32)
+    bias = rand(jax.random.PRNGKey(5), (6,), jnp.int32)
+    folded = fip.fold_beta_into_bias(b, bias)
+    got = fip.fip_matmul_beta_folded(a, b, folded)
+    np.testing.assert_array_equal(got, a @ b + bias)
+
+
+def test_proof_replay_g_equals_h():
+    """§3.2.1: the recurrence-built g^{(j)} equals the closed-form h^{(j)}."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(6))
+    a = rand(ka, (5, 8), jnp.int32)
+    b = rand(kb, (8, 7), jnp.int32)
+    for j in range(b.shape[1]):
+        g = fip.g_terms_by_recurrence(a, b, j)
+        h = fip.h_terms(a, b, j)
+        np.testing.assert_array_equal(g, h)
+
+
+def test_pair_swap_involution():
+    a = rand(jax.random.PRNGKey(7), (4, 10))
+    np.testing.assert_array_equal(fip.pair_swap(fip.pair_swap(a)), a)
+
+
+def test_odd_k_raises():
+    a = jnp.ones((4, 5))
+    b = jnp.ones((5, 3))
+    with pytest.raises(ValueError):
+        fip.fip_matmul(a, b)
+
+
+def test_k_chunked_cross_term():
+    ka, kb = jax.random.split(jax.random.PRNGKey(8))
+    a = rand(ka, (8, 64))
+    b = rand(kb, (64, 12))
+    full = fip.fip_matmul(a, b)
+    chunked = fip.fip_matmul(a, b, k_chunk=8)
+    np.testing.assert_allclose(chunked, full, rtol=1e-5, atol=1e-4)
+
+
+def test_batched_operands():
+    ka, kb = jax.random.split(jax.random.PRNGKey(9))
+    a = rand(ka, (3, 4, 8))
+    b = rand(kb, (8, 6))
+    np.testing.assert_allclose(fip.ffip_matmul(a, b), a @ b, rtol=1e-5, atol=1e-4)
+
+
+def test_trainable_gradients_match_baseline():
+    ka, kb = jax.random.split(jax.random.PRNGKey(10))
+    a = rand(ka, (6, 8))
+    b = rand(kb, (8, 4))
+
+    def loss_fip(a, b):
+        return jnp.sum(jnp.sin(fip.ffip_matmul_trainable(a, b, 0)))
+
+    def loss_base(a, b):
+        return jnp.sum(jnp.sin(a @ b))
+
+    ga1, gb1 = jax.grad(loss_fip, argnums=(0, 1))(a, b)
+    ga2, gb2 = jax.grad(loss_base, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga1, ga2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gb1, gb2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    m=st.integers(1, 12), kh=st.integers(1, 12), n=st.integers(1, 12),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_fip_ffip_int_exact(m, kh, n, seed):
+    """Property: for any int matrices with even K, all three algorithms agree
+    bit-exactly (the paper's central algebraic identity)."""
+    k = 2 * kh
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.randint(ka, (m, k), -100, 100, dtype=jnp.int32)
+    b = jax.random.randint(kb, (k, n), -100, 100, dtype=jnp.int32)
+    want = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_array_equal(fip.fip_matmul(a, b), want)
+    np.testing.assert_array_equal(fip.ffip_matmul(a, b), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), kh=st.integers(1, 8))
+def test_property_int8_range_growth(seed, kh):
+    """§4.4: both-signed int8 pre-adds fit in w+1 = 9 bits (d=1)."""
+    k = 2 * kh
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.randint(ka, (4, k), -128, 128, dtype=jnp.int32)
+    b = jax.random.randint(kb, (k, 4), -128, 128, dtype=jnp.int32)
+    t1 = a[:, 0::2][:, :, None] + b[1::2, :][None, :, :]
+    t2 = a[:, 1::2][:, :, None] + b[0::2, :][None, :, :]
+    for t in (t1, t2):
+        assert int(jnp.max(t)) <= 2 ** 8 - 1 + 2 ** 7  # < 2^8+2^7, fits 9-bit signed
+        assert int(jnp.min(t)) >= -(2 ** 8)

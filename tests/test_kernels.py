@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.ffip_gemm import ffip_gemm_y, ffip_gemm
+from repro.kernels.fip_gemm import fip_gemm
+from repro.kernels.baseline_gemm import baseline_gemm
+from repro.core import fip
+
+SHAPES = [
+    (8, 8, 8),
+    (16, 32, 16),
+    (128, 128, 128),
+    (64, 256, 32),
+    (100, 60, 36),     # padding path
+    (1, 130, 257),     # odd N, K padding
+]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8]
+ALGOS = ["baseline", "fip", "ffip"]
+
+
+def make_inputs(m, k, n, dtype, seed=0):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    if dtype == jnp.int8:
+        a = jax.random.randint(ka, (m, k), -128, 128, dtype=jnp.int32).astype(jnp.int8)
+        b = jax.random.randint(kb, (k, n), -128, 128, dtype=jnp.int32).astype(jnp.int8)
+    else:
+        a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+        b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    return a, b
+
+
+def tol_for(dtype, k):
+    if dtype == jnp.bfloat16:
+        return dict(rtol=5e-2, atol=5e-1)
+    return dict(rtol=1e-4, atol=1e-3 * max(1, k // 64))
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_kernel_matches_oracle(algo, dtype, m, k, n):
+    a, b = make_inputs(m, k, n, dtype)
+    got = ops.matmul(a, b, algo=algo, interpret=True)
+    if dtype == jnp.int8:
+        want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+        np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+    else:
+        want = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                                   **tol_for(dtype, k))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 16, 4), (32, 8, 16)])
+def test_block_shape_sweep_ffip(bm, bn, bk):
+    m, k, n = 64, 32, 48
+    a, b = make_inputs(m, k, n, jnp.float32, seed=3)
+    got = ffip_gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul_ref(a, b, "baseline")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 16, 4)])
+def test_block_shape_sweep_fip(bm, bn, bk):
+    m, k, n = 32, 16, 32
+    a, b = make_inputs(m, k, n, jnp.float32, seed=4)
+    got = fip_gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b, "baseline"),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ffip_y_operand_never_materializes_b():
+    """FFIP kernel consumes y only; reconstruct inside — int path bit-exact."""
+    a, b = make_inputs(32, 16, 24, jnp.int8, seed=5)
+    y = fip.make_y(b.astype(jnp.int32))   # 1-extra-bit storage, §4.4
+    got = ffip_gemm_y(a.astype(jnp.int32), y, bm=8, bn=8, bk=8, interpret=True)
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_fold_beta_kernel_plus_bias():
+    """Kernel with fold_beta=True + Eq.(15) bias == full product."""
+    a, b = make_inputs(16, 8, 8, jnp.int8, seed=6)
+    a32, b32 = a.astype(jnp.int32), b.astype(jnp.int32)
+    folded = fip.fold_beta_into_bias(b32)
+    got = fip_gemm(a32, b32, bm=8, bn=8, bk=8, interpret=True,
+                   fold_beta=True) + folded[None, :]
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_batched_wrapper():
+    ka, kb = jax.random.split(jax.random.PRNGKey(7))
+    a = jax.random.normal(ka, (2, 3, 16, 32))
+    b = jax.random.normal(kb, (32, 8))
+    got = ops.matmul(a, b, algo="ffip", interpret=True)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-3)
+
+
+def test_baseline_kernel_large_block():
+    a, b = make_inputs(256, 512, 128, jnp.float32, seed=8)
+    got = baseline_gemm(a, b, bm=128, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(got, np.asarray(a, np.float64) @ np.asarray(b, np.float64),
+                               rtol=1e-4, atol=1e-2)

@@ -1,0 +1,86 @@
+"""Quantization + §3.3/§4.4 ML-specific optimization tests (bit-exactness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fip, quant
+
+
+def test_d_bit_growth():
+    assert quant.d_bit_growth(True, True) == 1     # both signed
+    assert quant.d_bit_growth(False, False) == 1   # both unsigned
+    assert quant.d_bit_growth(True, False) == 2    # mixed: the §4.4 penalty
+    assert quant.preadd_bits(8, True, True) == 9
+    assert quant.preadd_bits(8, True, False) == 10
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.uint8, jnp.int16])
+@pytest.mark.parametrize("symmetric", [True, False])
+def test_quant_roundtrip_error_bounded(dtype, symmetric):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 3.0
+    qp = quant.calibrate(x, dtype, symmetric=symmetric)
+    err = jnp.abs(quant.dequantize(quant.quantize(x, qp), qp) - x)
+    assert float(jnp.max(err)) <= float(jnp.max(qp.scale)) * 1.01
+
+
+def test_per_channel_quant():
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * jnp.arange(1, 9)
+    qp = quant.calibrate(x, jnp.int8, axis=1)
+    assert qp.scale.shape == (8,)
+    err = jnp.abs(quant.dequantize(quant.quantize(x, qp), qp) - x)
+    assert float(jnp.max(err / jnp.maximum(qp.scale, 1e-9))) <= 1.01
+
+
+def test_int_gemm_ffip_bit_exact_with_zero_points():
+    """Eq. (20) zero-point elimination through the (F)FIP path is bit-exact."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(2))
+    aq = jax.random.randint(ka, (12, 16), 0, 256, dtype=jnp.int32).astype(jnp.uint8)
+    bq = jax.random.randint(kb, (16, 10), 0, 256, dtype=jnp.int32).astype(jnp.uint8)
+    za, zb = 7, 13
+    want = quant.int_gemm_baseline(aq, bq, za, zb)
+    for algo in ("fip", "ffip"):
+        got = quant.int_gemm_ffip(aq, bq, za, zb, algo=algo)
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), za=st.integers(-50, 50), zb=st.integers(-50, 50),
+       kh=st.integers(1, 10))
+def test_property_zero_point_elimination(seed, za, zb, kh):
+    k = 2 * kh
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    aq = jax.random.randint(ka, (6, k), -128, 128, dtype=jnp.int32).astype(jnp.int8)
+    bq = jax.random.randint(kb, (k, 5), -128, 128, dtype=jnp.int32).astype(jnp.int8)
+    want = quant.int_gemm_baseline(aq, bq, za, zb)
+    got = quant.int_gemm_ffip(aq, bq, za, zb, algo="ffip")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_quantized_dense_ffip_close_to_float():
+    """End-to-end quantized dense: FFIP int path ~= float reference."""
+    kx, kw, kb_ = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(kx, (32, 64))
+    w = jax.random.normal(kw, (64, 16)) * 0.1
+    bias = jax.random.normal(kb_, (16,)) * 0.01
+    xq = quant.calibrate(x, jnp.int8, symmetric=False)
+    wq = quant.calibrate(w, jnp.int8, symmetric=True)
+    got = quant.quantized_dense_ffip(x, w, bias, xq, wq, algo="ffip")
+    want = x @ w + bias
+    # int8 quantization error budget: ~scale_x*scale_w*sqrt(K) per element
+    rms = float(jnp.sqrt(jnp.mean((got - want) ** 2)))
+    assert rms < 0.05, rms
+
+
+def test_quantized_ffip_equals_quantized_baseline_bitexact():
+    """Same quantized network arithmetic, both orders — identical ints."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.normal(kx, (8, 32))
+    w = jax.random.normal(kw, (32, 8))
+    xq = quant.calibrate(x, jnp.int8, symmetric=False)
+    wq = quant.calibrate(w, jnp.int8, symmetric=False)
+    aq, bq = quant.quantize(x, xq), quant.quantize(w, wq)
+    base = quant.int_gemm_baseline(aq, bq, xq.zero_point, wq.zero_point)
+    ffip = quant.int_gemm_ffip(aq, bq, xq.zero_point, wq.zero_point)
+    np.testing.assert_array_equal(base, ffip)

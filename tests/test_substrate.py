@@ -1,0 +1,190 @@
+"""Substrate tests: data determinism, checkpoint atomicity + elastic reshard,
+optimizer/WSD, gradient compression, watchdog, serving batcher."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.train.watchdog import StepWatchdog, WatchdogConfig
+from repro.serve.batcher import BatchServer, Request
+
+
+# --- data --------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(global_batch=4, seq_len=32, vocab=128, seed=7)
+    ds = SyntheticLM(cfg)
+    a = ds.batch_at(5)
+    b = ds.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(ds.batch_at(6)["tokens"], a["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions_batch():
+    full = SyntheticLM(DataConfig(global_batch=4, seq_len=16, vocab=64,
+                                  n_hosts=1, host_id=0))
+    h0 = SyntheticLM(DataConfig(global_batch=4, seq_len=16, vocab=64,
+                                n_hosts=2, host_id=0))
+    h1 = SyntheticLM(DataConfig(global_batch=4, seq_len=16, vocab=64,
+                                n_hosts=2, host_id=1))
+    assert h0.batch_at(0)["tokens"].shape[0] == 2
+    assert h1.batch_at(0)["tokens"].shape[0] == 2
+    # different hosts generate different rows
+    assert not np.array_equal(h0.batch_at(0)["tokens"], h1.batch_at(0)["tokens"])
+
+
+def test_prefetcher_overlaps_and_orders():
+    ds = SyntheticLM(DataConfig(global_batch=2, seq_len=8, vocab=32))
+    pf = Prefetcher(ds, start_step=3)
+    steps = [next(pf)[0] for _ in range(4)]
+    pf.close()
+    assert steps == [3, 4, 5, 6]
+
+
+# --- checkpointing -------------------------------------------------------------
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (8, 16)) * scale,
+            "b": {"x": jax.random.normal(k2, (4,)) * scale}}
+
+
+def test_ckpt_roundtrip_and_keepN(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    t0 = _tree(jax.random.PRNGKey(0))
+    for s in (10, 20, 30):
+        mgr.save(s, t0, extra={"data_step": s})
+    assert mgr.all_steps() == [20, 30]       # keep-2 GC
+    restored, extra = mgr.restore(t0)
+    assert extra["data_step"] == 30
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t0, restored)
+
+
+def test_ckpt_atomicity_interrupted_write_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=False)
+    t0 = _tree(jax.random.PRNGKey(1))
+    mgr.save(1, t0)
+    # simulate a crash mid-write: stale .tmp dir with garbage
+    broken = tmp_path / "step_00000002.tmp"
+    broken.mkdir()
+    (broken / "arr_00000.npy").write_bytes(b"garbage")
+    assert mgr.latest_step() == 1            # .tmp never counts
+    restored, _ = mgr.restore(t0)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t0, restored)
+    mgr.save(3, t0)                          # next save GCs the .tmp
+    assert not broken.exists()
+
+
+def test_ckpt_elastic_reshard(tmp_path):
+    """Save on mesh A (1x1), restore with explicit shardings on mesh B (2x...)
+    if >1 device, else same mesh — the reshard path is exercised either way."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    t0 = _tree(jax.random.PRNGKey(2))
+    mgr.save(5, t0)
+    n = jax.device_count()
+    mesh = jax.make_mesh((n,), ("data",))
+    shard = {"w": NamedSharding(mesh, P("data" if 8 % n == 0 else None)),
+             "b": {"x": NamedSharding(mesh, P())}}
+    restored, _ = mgr.restore(t0, shardings=shard)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t0, restored)
+    assert restored["w"].sharding == shard["w"]
+
+
+# --- optimizer -----------------------------------------------------------------
+
+def test_adamw_decreases_quadratic_loss():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, schedule="const",
+                            warmup_steps=0, grad_clip=0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw.update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_wsd_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                            total_steps=100, decay_frac=0.2, min_lr_frac=0.1)
+    lr = lambda s: float(adamw.schedule_lr(cfg, jnp.asarray(s)))
+    assert lr(0) == 0.0
+    assert lr(5) == pytest.approx(0.5)       # warmup
+    assert lr(50) == pytest.approx(1.0)      # stable plateau (the WSD point)
+    assert lr(79) == pytest.approx(1.0, abs=0.02)
+    assert lr(100) == pytest.approx(0.1, rel=0.05)   # decayed tail
+    # cosine reference decays earlier
+    ccfg = adamw.AdamWConfig(lr=1.0, schedule="cosine", warmup_steps=10,
+                             total_steps=100)
+    assert float(adamw.schedule_lr(ccfg, jnp.asarray(50))) < 0.7
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_ef_compression_unbiased_over_time(seed):
+    """Error-feedback int8 compression: accumulated deq error stays bounded
+    (the residual does not drift), so long-run updates are unbiased."""
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (64,))}
+    err = jax.tree.map(lambda x: jnp.zeros_like(x), g)
+    total_true = jnp.zeros((64,))
+    total_sent = jnp.zeros((64,))
+    for i in range(30):
+        gi = jax.tree.map(lambda x: x * (1 + 0.01 * i), g)
+        q, s, err = adamw.ef_compress_tree(gi, err)
+        total_true = total_true + gi["w"]
+        total_sent = total_sent + adamw.decompress_int8(q["w"], s["w"])
+    resid = float(jnp.max(jnp.abs(total_true - total_sent)))
+    scale = float(jnp.max(jnp.abs(total_true))) + 1e-6
+    assert resid / scale < 0.05   # bounded by one quantization step, not 30
+
+
+# --- watchdog -------------------------------------------------------------------
+
+def test_watchdog_flags_stragglers():
+    fired = []
+    dog = StepWatchdog(WatchdogConfig(threshold=2.0, consecutive_to_act=2),
+                       on_straggler=lambda s, dt, ema: fired.append(s))
+    for s in range(10):
+        dog.observe(s, 1.0)
+    dog.observe(10, 5.0)
+    assert not fired
+    dog.observe(11, 5.0)
+    assert fired == [11]
+    assert dog.ema == pytest.approx(1.0, rel=0.01)   # outliers excluded from EMA
+
+
+# --- serving batcher ---------------------------------------------------------
+
+def test_batch_server_continuous_batching():
+    cfg = configs.smoke_config(configs.get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = BatchServer(model, batch_slots=2, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=(4,)),
+                    max_new_tokens=3) for i in range(5)]
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run_until_drained(params)
+    assert len(done) == 5
+    for r in done:
+        assert len(r.out_tokens) == 3        # exact token budget
+
+    # batched output == sequential single-slot output (slot independence)
+    srv2 = BatchServer(model, batch_slots=1, max_len=32)
+    srv2.submit(Request(rid=99, prompt=reqs[0].prompt, max_new_tokens=3))
+    solo = srv2.run_until_drained(params)[0]
+    assert solo.out_tokens == done[0].out_tokens

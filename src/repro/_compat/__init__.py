@@ -1,0 +1,1 @@
+"""Dependency-compat fallbacks (gated stand-ins for optional dev deps)."""

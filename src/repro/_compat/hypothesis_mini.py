@@ -1,0 +1,152 @@
+"""Minimal, deterministic stand-in for the `hypothesis` property-testing API.
+
+The test suite's property tests use a small slice of hypothesis:
+`@settings(max_examples=N, deadline=None)`, `@given(x=st.integers(lo, hi))`.
+When the real package is unavailable (this container cannot pip install),
+tests/conftest.py registers this module as `hypothesis` in sys.modules so the
+suite still *collects and runs* the properties — over a deterministic,
+seeded sample of the strategy space — instead of erroring at import time.
+
+Determinism contract: the example stream is a function of the test's qualname
+only, so failures reproduce across runs and machines. When real hypothesis is
+installed (see pyproject.toml [project.optional-dependencies] dev), it takes
+precedence and this module is never imported.
+
+Example count: bounded by min(settings.max_examples, REPRO_MINIHYP_EXAMPLES
+[default 12]) to keep CPU suite time sane; the env var raises it for
+thorough local runs.
+"""
+from __future__ import annotations
+
+import os
+import random
+import types
+import zlib
+
+__version__ = "0.0-repro-mini"
+
+_DEFAULT_MAX_EXAMPLES = 100
+_EXAMPLE_CAP = int(os.environ.get("REPRO_MINIHYP_EXAMPLES", "12"))
+
+
+class _Strategy:
+    def __init__(self, sample_fn, describe):
+        self._sample = sample_fn
+        self._describe = describe
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return self._describe
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2 ** 16) if min_value is None else int(min_value)
+    hi = 2 ** 16 if max_value is None else int(max_value)
+
+    def sample(rng):
+        return rng.randint(lo, hi)
+
+    return _Strategy(sample, f"integers({lo}, {hi})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def floats(min_value=None, max_value=None, **_ignored) -> _Strategy:
+    # Unbounded defaults sample a wide signed range (real hypothesis explores
+    # the full float space; don't let the fallback silently stay in [0, 1]).
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi), f"floats({lo}, {hi})")
+
+
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool), f"sampled_from({pool!r})")
+
+
+def lists(elements: _Strategy, min_size=0, max_size=8) -> _Strategy:
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+
+    return _Strategy(sample, f"lists({elements!r})")
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording the requested example count on the test."""
+
+    def deco(fn):
+        fn._mini_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Decorator: run the test over a deterministic sample of the strategies.
+
+    Only keyword strategies are supported (the suite uses none positionally).
+    The wrapper deliberately does NOT set __wrapped__: pytest would follow it
+    and demand fixtures for the property arguments.
+    """
+    if arg_strategies:
+        raise NotImplementedError(
+            "hypothesis_mini supports keyword strategies only")
+
+    def deco(fn):
+        def wrapper():
+            requested = getattr(wrapper, "_mini_max_examples",
+                                getattr(fn, "_mini_max_examples",
+                                        _DEFAULT_MAX_EXAMPLES))
+            n = max(1, min(int(requested), _EXAMPLE_CAP))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                example = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(**example)
+                except _UnsatisfiedAssumption:
+                    continue
+                except Exception as e:  # re-raise with the falsifying example
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"{fn.__name__}(**{example!r})") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    all = classmethod(lambda cls: [cls.too_slow, cls.data_too_large])
+
+
+def assume(condition) -> bool:
+    """Best-effort assume: abort the example silently when unsatisfied."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+# `from hypothesis import strategies as st` needs a module-like attribute.
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.booleans = booleans
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.lists = lists

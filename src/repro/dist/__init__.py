@@ -1,0 +1,11 @@
+"""Distribution layer: process-global mesh context + sharding rule engine.
+
+`repro.dist.context` carries the active `jax.sharding.Mesh` so model code
+(flash attention, selective scan) can shard_map itself without threading the
+mesh through every call signature; `repro.dist.sharding` turns parameter /
+batch / cache pytrees into `PartitionSpec` trees via a name/shape rule table
+with hard divisibility guards.
+"""
+from repro.dist.context import get_mesh, mesh_context  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    cache_specs, data_specs, param_specs, to_named)

@@ -1,0 +1,52 @@
+"""Process-global mesh context.
+
+The launch stack enters `mesh_context(mesh)` once around lowering/training;
+model internals call `get_mesh()` at trace time to decide whether to
+shard_map a Pallas kernel over the mesh (see models/attention.py and
+models/ssm.py). Keeping this ambient rather than threading a mesh argument
+through every layer keeps the model code identical between the single-device
+smoke path and the production 16x16 / 2x16x16 meshes.
+
+Nesting is supported (a stack): the innermost context wins, matching the
+semantics of `with mesh:` itself. The real `jax.sharding.Mesh` context is
+entered too, so bare `PartitionSpec`s in `jax.jit` in_shardings resolve
+against the same mesh the model code sees.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+from jax.sharding import Mesh
+
+_state = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_state, "meshes"):
+        _state.meshes = []
+    return _state.meshes
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh) -> Iterator[Mesh]:
+    """Make `mesh` the ambient mesh for the dynamic extent of the block."""
+    stack = _stack()
+    stack.append(mesh)
+    try:
+        # Mesh is its own context manager (sets jax's thread-local physical
+        # mesh); duck-typed so shape-only stand-ins work in unit tests.
+        if hasattr(mesh, "__enter__"):
+            with mesh:
+                yield mesh
+        else:
+            yield mesh
+    finally:
+        stack.pop()
+
+
+def get_mesh() -> Optional[Mesh]:
+    """The innermost active mesh, or None outside any mesh_context."""
+    stack = _stack()
+    return stack[-1] if stack else None

@@ -1,0 +1,28 @@
+"""Compat layer over Pallas TPU API drift.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` across JAX
+releases; the installed toolchain may carry either name. Every kernel builds
+its compiler params through :func:`tpu_compiler_params` so one probe point
+absorbs the drift (tests/test_kernels.py exercises all kernels in interpret
+mode at collection-adjacent cost precisely so this breaks loudly, not deep in
+a smoke test).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams", None)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build a Pallas TPU compiler-params object under either JAX spelling.
+
+    kwargs are passed through (e.g. dimension_semantics=("parallel", ...)).
+    Returns None when the installed Pallas exposes neither class, in which
+    case pallas_call simply runs without TPU compiler hints — correct, if
+    slower, which is the right degradation for interpret-mode CPU CI.
+    """
+    if _PARAMS_CLS is None:
+        return None
+    return _PARAMS_CLS(**kwargs)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 from repro.core import fip
 
 Array = jax.Array
@@ -86,7 +88,7 @@ def ffip_gemm_y(a: Array, y: Array, *, bm: int = 128, bn: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
         scratch_shapes=[pltpu.VMEM((bk, 1), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, y)

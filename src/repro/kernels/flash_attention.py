@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 Array = jax.Array
 NEG_INF = -1e30
 
@@ -114,7 +116,7 @@ def _flash_fwd(q, k, v, window, *, causal=True, bq=128, bk=128,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(window, q, k, v)
@@ -228,7 +230,7 @@ def _flash_bwd(q, k, v, o, lse, do, window, *, causal=True, bq=128, bk=128,
             jax.ShapeDtypeStruct((bh, sk_pad, d), f32),
             jax.ShapeDtypeStruct((bh, sk_pad, dv), f32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(window, q, k, v, do, o, lse)

@@ -14,6 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.baseline_gemm import baseline_gemm
+# Public surface for the Pallas API-drift shim (kernel modules import it from
+# repro.kernels.compat to avoid a circular import with this module).
+from repro.kernels.compat import tpu_compiler_params  # noqa: F401
 from repro.kernels.fip_gemm import fip_gemm
 from repro.kernels.ffip_gemm import ffip_gemm
 

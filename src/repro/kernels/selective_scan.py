@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 Array = jax.Array
 
 
@@ -103,7 +105,7 @@ def selective_scan(x: Array, dt: Array, b: Array, c: Array, a: Array,
             jax.ShapeDtypeStruct((bt, s // chunk, di, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, b, c, a, h0)
@@ -231,7 +233,7 @@ def selective_scan_bwd(x, dt, b, c, a, h_starts, dy, *, chunk=128, bd=512,
         ],
         scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32),
                         pltpu.VMEM((bd, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, b, c, a, h_starts, dy)

@@ -141,6 +141,8 @@ def analyze(compiled, meta, cfg, shape) -> dict:
     fn, args = meta.pop("_costable")
     jc = jcosts.fn_cost(fn, *args)
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):   # older JAX: one dict per program
+        xla_cost = xla_cost[0] if xla_cost else {}
     hlo = compiled.as_text()
     coll = roof.collective_bytes(hlo)
     mem = compiled.memory_analysis()

@@ -19,8 +19,10 @@ from repro.kernels import ops
 
 
 def _time(fn, *args, iters: int = 3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warmup: ONE call (jax.block_until_ready handles tuples/pytrees). The
+    # old isinstance-probe evaluated fn(*args) twice, doubling compile+run
+    # warmup cost for every timed entry.
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

@@ -1,0 +1,106 @@
+"""Serving benchmark: continuous-batching throughput + per-phase timings.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--arch minicpm-2b]
+
+Runs the continuous batcher (float and int8-FFIP quantized modes) over a
+stream of mixed-length requests and writes ``benchmarks/BENCH_serve.json``:
+tok/s plus the prefill / decode / host-overhead split from BatchServer.stats.
+
+CAVEAT (same as gemm_micro): this container is CPU-only, so absolute timings
+measure the XLA-CPU + interpret-mode harness, not accelerator silicon — the
+load-bearing outputs are the phase RATIOS and the batched-vs-sequential
+speedup, which show what the batcher amortizes. Note also that the first
+prefill at each distinct prompt length traces+compiles inside the timed
+region, so ``phase_s.prefill`` includes jit warmup (as a cold server would).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serve.batcher import BatchServer, Request
+
+OUT = pathlib.Path(__file__).resolve().parent / "BENCH_serve.json"
+
+
+def bench(arch: str, *, slots: int, requests: int, max_new: int,
+          max_len: int, quantized: bool, seed: int = 0) -> dict:
+    cfg = configs.smoke_config(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = BatchServer(model, batch_slots=slots, max_len=max_len,
+                      quantized=quantized)
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(3, 12, requests)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=(int(l),)),
+                    max_new_tokens=max_new) for i, l in enumerate(lens)]
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run_until_drained(params)
+    wall = time.perf_counter() - t0
+    assert len(done) == requests, "serve_bench: requests dropped"
+
+    total = sum(len(r.out_tokens) for r in done)
+    st = srv.stats
+    return {
+        "arch": cfg.name,
+        "mode": "int8-ffip" if quantized else "float",
+        "slots": slots,
+        "requests": requests,
+        "completed": len(done),
+        "tokens_out": total,
+        "decode_steps": st["steps"],
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(total / wall, 2),
+        "phase_s": {
+            "prefill": round(st["prefill_s"], 3),
+            "decode": round(st["decode_s"], 3),
+            "host_other": round(wall - st["prefill_s"] - st["decode_s"], 3),
+        },
+        "prefill_tokens": st["prefill_tokens"],
+        "decode_tokens": st["decode_tokens"],
+        "decode_ms_per_step": round(1e3 * st["decode_s"] / max(st["steps"], 1), 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b",
+                    choices=sorted(configs.ARCHS))
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    results = [
+        bench(args.arch, slots=args.slots, requests=args.requests,
+              max_new=args.max_new, max_len=args.max_len, quantized=q)
+        for q in (False, True)
+    ]
+    out = {
+        "bench": "serve",
+        "note": ("CPU-only container: interpret-mode timings; ratios and "
+                 "phase split are the load-bearing numbers"),
+        "results": results,
+    }
+    OUT.write_text(json.dumps(out, indent=2) + "\n")
+    for r in results:
+        print(f"serve_bench.{r['arch']}.{r['mode']},{r['tok_per_s']} tok/s,"
+              f"prefill={r['phase_s']['prefill']}s,"
+              f"decode={r['phase_s']['decode']}s,"
+              f"host={r['phase_s']['host_other']}s")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,11 @@
     PYTHONPATH=src python examples/serve_batch.py
 
 Eight requests with different prompt lengths and token budgets stream through
-four decode slots; finished slots are immediately refilled (the decode step
-lowered in the dry-run's ``decode_*`` cells is exactly the step used here)."""
+four decode slots; each slot decodes at its OWN position (a (B,) position
+vector flows through Model.decode_step) and finished slots are immediately
+refilled (the decode step lowered in the dry-run's ``decode_*`` cells is
+exactly the step used here). Pass quantized=True to BatchServer to route the
+projections through the int8 FFIP path instead."""
 import time
 
 import jax

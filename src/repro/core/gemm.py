@@ -35,6 +35,11 @@ class GemmConfig:
     impl: Impl = "xla"
     k_chunk: int = 0           # chunking for ref fip/ffip cross-term
     interpret: bool = True     # pallas interpret mode (CPU container)
+    # int8 inference mode (§3.3/§4.4): dense layers whose params carry an
+    # offline-prepared "q" entry (core.quant.attach_quantized_weights) run the
+    # integer (F)FIP path with Eq. 15 folded beta + the Eq. 20 zero-point
+    # adjuster; layers without one fall back to the float `algo` path.
+    quantized: bool = False
 
 
 _state = threading.local()

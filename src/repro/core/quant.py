@@ -105,15 +105,16 @@ def int_gemm_baseline(aq: Array, bq: Array, za: Array, zb: Array) -> Array:
     return jnp.matmul(a32, b32)
 
 
-def zero_point_adjuster(aq: Array, zb: Array, k: int) -> Array:
+def zero_point_adjuster(aq: Array, zb: Array) -> Array:
     """Eq. (20) adjuster: AR_ij = zb_j * rowsum(A)_i, one multiply per element.
 
     The paper folds this into the alpha-generator row; here it is an explicit
-    rank-1 term: outer(rowsum(A), zb-broadcast).
+    rank-1 term: outer(rowsum(A), zb). ``zb`` may be a per-tensor scalar or a
+    per-channel ``(N,)`` vector of weight zero-points.
     """
-    rowsum = jnp.sum(aq.astype(jnp.int32), axis=-1)           # (..., M)
-    zb_vec = jnp.broadcast_to(jnp.asarray(zb, jnp.int32), ())  # scalar zp
-    return rowsum[..., :, None] * zb_vec                       # (..., M, 1) -> bcast
+    rowsum = jnp.sum(aq.astype(jnp.int32), axis=-1, keepdims=True)  # (..., M, 1)
+    zb_vec = jnp.atleast_1d(jnp.asarray(zb, jnp.int32))             # (1,) or (N,)
+    return rowsum * zb_vec                                          # (..., M, N)
 
 
 def int_gemm_ffip(aq: Array, bq: Array, za: Array, zb: Array,
@@ -126,17 +127,117 @@ def int_gemm_ffip(aq: Array, bq: Array, za: Array, zb: Array,
       * the zero-point contributions are removed via the adjuster (Eq. 20)
         plus the constant K*za*zb and za*colsum(B) terms,
     producing bit-exact int32 equality with :func:`int_gemm_baseline`.
+    ``za`` is a per-tensor (or per-row ``(M, 1)``) activation zero-point;
+    ``zb`` may be per-tensor or per-channel ``(N,)``.
     """
     k = aq.shape[-1]
     mm = fip.fip_matmul if algo == "fip" else fip.ffip_matmul
     raw = mm(aq.astype(jnp.int32), bq.astype(jnp.int32))       # A_q B_q
     # remove zero-point contributions:
     # (A-za)(B-zb) = AB - za*colsum(B) - zb*rowsum(A) + K*za*zb
-    rowsum_a = jnp.sum(aq.astype(jnp.int32), axis=-1, keepdims=True)
     colsum_b = jnp.sum(bq.astype(jnp.int32), axis=0, keepdims=True)
     za = jnp.asarray(za, jnp.int32)
     zb = jnp.asarray(zb, jnp.int32)
-    return raw - za * colsum_b - zb * rowsum_a + k * za * zb
+    return raw - za * colsum_b - zero_point_adjuster(aq, zb) + k * za * zb
+
+
+# ---------------------------------------------------------------------------
+# Offline-prepared quantized dense layers — the serving decode path.
+# ---------------------------------------------------------------------------
+
+def prepare_quantized_dense(w: Array, *, dtype=jnp.int8,
+                            symmetric: bool = False) -> dict:
+    """Offline weight quantization for the serving path. ``w``: (..., K, N)
+    (leading dims are stacked layer groups; each layer calibrates on its own).
+
+    Per-output-channel affine quantization plus everything the paper computes
+    once after training:
+      * ``neg_beta``  — Eq. (15): -beta(W_q), folded into the integer bias so
+        the FFIP beta subtraction costs nothing at inference,
+      * ``colsum``    — colsum(W_q), the za-side zero-point term,
+      * ``zp``        — per-channel zero-points consumed by the Eq. (20)
+        adjuster at decode time.
+    """
+    qmin, qmax = _INT_INFO[jnp.dtype(dtype)]
+    w = w.astype(jnp.float32)
+    if symmetric:
+        amax = jnp.max(jnp.abs(w), axis=-2)
+        bound = qmax if qmin < 0 else (qmax - qmin) // 2
+        scale = jnp.maximum(amax / bound, 1e-12)
+        zp = (jnp.zeros_like(scale, jnp.int32) if qmin < 0
+              else jnp.full_like(scale, (qmax + 1) // 2).astype(jnp.int32))
+    else:
+        wmin = jnp.min(w, axis=-2)
+        wmax = jnp.max(w, axis=-2)
+        scale = jnp.maximum((wmax - wmin) / (qmax - qmin), 1e-12)
+        zp = jnp.clip(jnp.round(qmin - wmin / scale), qmin, qmax).astype(jnp.int32)
+    qw = jnp.clip(jnp.round(w / scale[..., None, :]) + zp[..., None, :],
+                  qmin, qmax).astype(dtype)
+    q32 = qw.astype(jnp.int32)
+    beta = jnp.sum(q32[..., 0::2, :] * q32[..., 1::2, :], axis=-2)  # Eq. (4)
+    return {"qw": qw, "scale": scale, "zp": zp,
+            "neg_beta": -beta, "colsum": jnp.sum(q32, axis=-2)}
+
+
+def quantized_dense_apply(x: Array, q: dict, *, algo: str = "ffip") -> Array:
+    """Apply a dense layer through its offline-prepared int8 weights.
+
+    x: (M, K) float; q: per-layer dict from :func:`prepare_quantized_dense`
+    (qw (K, N), scale/zp/neg_beta/colsum (N,)). Activations quantize
+    dynamically PER TOKEN ROW (asymmetric int8) so a row's result never
+    depends on what else is in the batch — continuous-batched decode stays
+    bit-identical to sequential decode. Returns float32 (M, N) ~= x @ w.
+    """
+    qmin, qmax = _INT_INFO[jnp.int8.dtype]
+    x32 = x.astype(jnp.float32)
+    xmin = jnp.minimum(jnp.min(x32, axis=-1, keepdims=True), 0.0)
+    xmax = jnp.maximum(jnp.max(x32, axis=-1, keepdims=True), 0.0)
+    a_scale = jnp.maximum((xmax - xmin) / (qmax - qmin), 1e-12)    # (M, 1)
+    a_zp = jnp.clip(jnp.round(qmin - xmin / a_scale),
+                    qmin, qmax).astype(jnp.int32)                  # (M, 1)
+    aq = jnp.clip(jnp.round(x32 / a_scale) + a_zp, qmin, qmax).astype(jnp.int8)
+
+    a32 = aq.astype(jnp.int32)
+    b32 = q["qw"].astype(jnp.int32)
+    k = b32.shape[-2]
+    if algo == "baseline":
+        raw = jnp.matmul(a32, b32)                                 # A_q W_q
+    elif algo == "ffip":
+        # alpha is pair-swap invariant, so FFIP is the Eq. 16 form on the
+        # pair-swapped operands with the same offline-folded beta
+        raw = fip.fip_matmul_beta_folded(
+            fip.pair_swap(a32), fip.pair_swap_rows(b32), q["neg_beta"])
+    else:
+        raw = fip.fip_matmul_beta_folded(a32, b32, q["neg_beta"])  # Eq. 15/16
+    acc = (raw - a_zp * q["colsum"]                 # za * colsum(W_q)
+           - zero_point_adjuster(aq, q["zp"])       # Eq. (20): zb_j * rowsum(A)_i
+           + k * a_zp * q["zp"])
+    return acc.astype(jnp.float32) * (a_scale * q["scale"])
+
+
+def attach_quantized_weights(params, *, dtype=jnp.int8,
+                             skip: Tuple[str, ...] = ("unembed",)) -> dict:
+    """Walk a model param tree and attach a ``"q"`` entry (from
+    :func:`prepare_quantized_dense`) next to every dense weight ``{"w": ...}``
+    whose contraction dim is even. The added leaves carry the same leading
+    stacked-layer dims as ``w``, so layer scans slice them transparently.
+    Float weights/biases stay in place (gradients, fallback paths, logits —
+    ``skip`` defaults to the unembed projection).
+    """
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        if "w" in node and not isinstance(node["w"], dict):
+            w = node["w"]
+            if w.ndim >= 2 and w.shape[-2] % 2 == 0:
+                out = dict(node)
+                out["q"] = prepare_quantized_dense(w, dtype=dtype)
+                return out
+            return node
+        return {key: (val if key in skip else walk(val))
+                for key, val in node.items()}
+
+    return walk(params)
 
 
 def quantized_dense_ffip(x: Array, w: Array, bias: Optional[Array],
@@ -153,16 +254,17 @@ def quantized_dense_ffip(x: Array, w: Array, bias: Optional[Array],
     k = aq.shape[-1]
     if k % 2 != 0:
         raise ValueError("pad K to even before quantized FFIP")
-    mm_cross = fip.fip_cross_term(
-        fip.pair_swap(aq.astype(jnp.int32)), fip.pair_swap_rows(bq.astype(jnp.int32))
-    ) if algo == "ffip" else fip.fip_cross_term(
-        aq.astype(jnp.int32), bq.astype(jnp.int32))
-    alpha = fip.fip_alpha(aq.astype(jnp.int32))
-    beta_folded = fip.fold_beta_into_bias(bq.astype(jnp.int32))   # -beta (Eq. 15)
-    raw = mm_cross - alpha[..., :, None] + beta_folded            # == A_q B_q
-    rowsum_a = jnp.sum(aq.astype(jnp.int32), axis=-1, keepdims=True)
-    colsum_b = jnp.sum(bq.astype(jnp.int32), axis=0, keepdims=True)
-    acc = raw - xq.zero_point * colsum_b - wq.zero_point * rowsum_a \
+    a32 = aq.astype(jnp.int32)
+    b32 = bq.astype(jnp.int32)
+    beta_folded = fip.fold_beta_into_bias(b32)                    # -beta (Eq. 15)
+    if algo == "ffip":
+        raw = fip.fip_matmul_beta_folded(
+            fip.pair_swap(a32), fip.pair_swap_rows(b32), beta_folded)
+    else:
+        raw = fip.fip_matmul_beta_folded(a32, b32, beta_folded)   # == A_q B_q
+    colsum_b = jnp.sum(b32, axis=0, keepdims=True)
+    acc = raw - xq.zero_point * colsum_b \
+        - zero_point_adjuster(aq, wq.zero_point) \
         + k * xq.zero_point * wq.zero_point
     out = acc.astype(jnp.float32) * (xq.scale * wq.scale)
     if bias is not None:

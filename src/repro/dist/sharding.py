@@ -177,9 +177,10 @@ def param_specs(params: PyTree, mesh, moe_partition: str = "expert") -> PyTree:
 def data_specs(batch: PyTree, mesh) -> PyTree:
     """Data-parallel input specs: dim 0 over ("pod",)"data", rest replicated.
 
-    Scalars (e.g. decode `pos`) are fully replicated. The divisibility guard
-    applies: a global batch that does not divide the data axes is replicated
-    rather than rejected.
+    Scalars are fully replicated; the (B,) per-slot decode position vector
+    shards over the batch axes exactly like the (B, 1) token it accompanies.
+    The divisibility guard applies: a global batch that does not divide the
+    data axes is replicated rather than rejected.
     """
     sizes = _axis_sizes(mesh)
 

@@ -57,11 +57,13 @@ def serve_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
         }
         out.update(_frontend_specs(cfg, b))
         return out
-    # decode: cache of seq_len already-filled tokens, one token in flight
+    # decode: cache of seq_len already-filled tokens, one token in flight.
+    # pos is the per-slot (B,) position vector of the continuous batcher
+    # (Model.decode_step also accepts a scalar for shared-offset decode).
     return {
         "token": sds((b, 1), jnp.int32),
         "cache": cache_specs_struct(cfg, b, s + prefix),
-        "pos": sds((), jnp.int32),
+        "pos": sds((b,), jnp.int32),
     }
 
 

@@ -1,7 +1,12 @@
-"""Serving launcher: continuous batching over any arch.
+"""Serving launcher: per-slot continuous batching over any arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
         --requests 8 --slots 4
+
+``--quantized`` routes the dense/attention projections through the int8 FFIP
+decode path (offline-quantized weights, Eq. 15 folded beta, Eq. 20 zero-point
+adjuster). Exits non-zero if any request is dropped or over/under-generates,
+so this doubles as the CI batcher-regression smoke.
 """
 from __future__ import annotations
 
@@ -24,6 +29,8 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--quantized", action="store_true",
+                    help="int8 FFIP decode path (offline weight quantization)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -31,19 +38,37 @@ def main():
         cfg = configs.smoke_config(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    srv = BatchServer(model, batch_slots=args.slots, max_len=args.max_len)
+    srv = BatchServer(model, batch_slots=args.slots, max_len=args.max_len,
+                      quantized=args.quantized)
 
     rng = np.random.default_rng(0)
+    lens = rng.integers(3, 12, args.requests)
     t0 = time.perf_counter()
     for i in range(args.requests):
         srv.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab, size=(8,)),
+            rid=i, prompt=rng.integers(0, cfg.vocab, size=(int(lens[i]),)),
             max_new_tokens=args.max_new))
     done = srv.run_until_drained(params)
     dt = time.perf_counter() - t0
+
     total = sum(len(r.out_tokens) for r in done)
-    print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s host-side)")
+    mode = "int8-ffip" if args.quantized else "float"
+    st = srv.stats
+    print(f"[{mode}] {len(done)}/{args.requests} requests / {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s host-side)")
+    print(f"  prefill {st['prefill_s']:.2f}s ({st['prefill_tokens']} tok), "
+          f"decode {st['decode_s']:.2f}s over {st['steps']} steps "
+          f"({st['decode_tokens']} tok), "
+          f"host/other {dt - st['prefill_s'] - st['decode_s']:.2f}s")
+
+    # regression gates: nothing dropped, exact token budgets, valid ids
+    assert len(done) == args.requests, "run_until_drained dropped requests"
+    assert sorted(r.rid for r in done) == list(range(args.requests))
+    for r in done:
+        assert len(r.out_tokens) == r.max_new_tokens, \
+            (r.rid, len(r.out_tokens), r.max_new_tokens)
+        assert all(0 <= t < cfg.vocab for t in r.out_tokens), r.rid
+    print("OK")
 
 
 if __name__ == "__main__":

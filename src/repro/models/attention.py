@@ -33,6 +33,32 @@ def gqa_init(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
+def _cache_write(buf: Array, new: Array, cache_pos) -> Array:
+    """Write ``new`` (B, s, ...) rows into ``buf`` (B, S_max, ...) at
+    ``cache_pos``.
+
+    Scalar ``cache_pos``: shared offset (prefill / legacy decode) — a single
+    dynamic slice. ``(B,)`` vector: per-slot offsets (continuous-batching
+    decode) — one dynamic slice per batch row via vmap, lowering to a batched
+    scatter. Slot i's row lands at ``buf[i, cache_pos[i]]``.
+    """
+    new = new.astype(buf.dtype)
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=1)
+    return jax.vmap(
+        lambda row, n, p: jax.lax.dynamic_update_slice_in_dim(row, n, p, axis=0)
+    )(buf, new, pos)
+
+
+def _cache_end(cache_pos, s: int) -> Array:
+    """Exclusive end of valid cache rows per batch entry: (1, 1) for a shared
+    scalar position, (B, 1) for per-slot positions — broadcasts against a
+    (B or 1, S_max) key-position grid."""
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    return jnp.reshape(pos + s, (-1, 1))
+
+
 def _mask(q_pos: Array, k_pos: Array, window, causal: bool) -> Array:
     """(..., Sq, Sk) boolean keep-mask from positions + window scalar."""
     diff = q_pos[..., :, None] - k_pos[..., None, :]
@@ -136,19 +162,18 @@ def gqa_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         # prefill into an EMPTY cache: attention over the prompt == flash
         # self-attention; k/v written at offset 0 (32k cells never touch an
         # (S,S) score tensor this way — §Perf)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        k_cache = _cache_write(cache["k"], k, cache_pos)
+        v_cache = _cache_write(cache["v"], v, cache_pos)
         out = _flash_sdpa(q, k, v, window, causal)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
-        # decode: write this step's k/v at cache_pos, attend over the cache
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        # decode: write this step's k/v at cache_pos (per-slot rows when
+        # cache_pos is a (B,) vector), attend over the cache
+        k_cache = _cache_write(cache["k"], k, cache_pos)
+        v_cache = _cache_write(cache["v"], v, cache_pos)
         s_max = k_cache.shape[1]
         k_pos = jnp.arange(s_max, dtype=jnp.int32)
-        valid = k_pos[None, :] < (cache_pos + s)
+        valid = k_pos[None, :] < _cache_end(cache_pos, s)
         q_pos = positions if positions.ndim == 2 else positions[None, :]
         keep = _mask(q_pos, k_pos[None, :], window, causal) & valid[:, None, :]
         out = _sdpa(q, k_cache, v_cache, keep)
@@ -208,11 +233,9 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         new_cache = None
         if cache is not None:   # prefill: write compressed cache, flash attn
             new_cache = {
-                "c_kv": jax.lax.dynamic_update_slice_in_dim(
-                    cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_pos, axis=1),
-                "k_rope": jax.lax.dynamic_update_slice_in_dim(
-                    cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
-                    cache_pos, axis=1),
+                "c_kv": _cache_write(cache["c_kv"], c_kv, cache_pos),
+                "k_rope": _cache_write(cache["k_rope"], k_rope[:, :, 0, :],
+                                       cache_pos),
             }
         if cfg.attention_impl == "flash":
             # PERF (§Perf deepseek iter-1): flash for MLA — concat nope+rope
@@ -231,11 +254,8 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         # ratio 0.00 in the baseline roofline), absorb W_uk into the query
         # and W_uv into the context: attention runs entirely in the rank-r
         # latent space against the compressed cache.
-        c_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_pos, axis=1)
-        r_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
-            cache_pos, axis=1)
+        c_cache = _cache_write(cache["c_kv"], c_kv, cache_pos)
+        r_cache = _cache_write(cache["k_rope"], k_rope[:, :, 0, :], cache_pos)
         s_max = c_cache.shape[1]
         w_ukv = p["w_ukv"]["w"].reshape(m.kv_lora_rank, h,
                                         m.nope_head_dim + m.v_head_dim)
@@ -251,7 +271,7 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
             jnp.arange(s_max, dtype=jnp.int32)[None], (b, s_max))
         q_positions = positions if positions.ndim == 2 else positions[None, :]
         keep = _mask(q_positions, kv_positions, window, True) \
-            & (kv_positions < (cache_pos + s))[:, None, :]
+            & (kv_positions < _cache_end(cache_pos, s))[:, None, :]
         scores = jnp.where(keep[:, None, :, :], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(c_cache.dtype), c_cache)

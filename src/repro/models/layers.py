@@ -7,7 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import gemm
+from repro.core import quant
+from repro.core.gemm import current_config, gemm
 
 Array = jax.Array
 
@@ -22,9 +23,21 @@ def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
 
 
 def dense(x: Array, p: dict) -> Array:
-    """x: (..., d_in) @ w: (d_in, d_out). Routed through the GEMM provider."""
+    """x: (..., d_in) @ w: (d_in, d_out). Routed through the GEMM provider.
+
+    When the provider is in quantized mode AND the param dict carries an
+    offline-prepared ``"q"`` entry (core.quant.attach_quantized_weights), the
+    matmul runs as an int8 (F)FIP GEMM with per-token activation quantization
+    — the serving decode path of ISSUE 2. Bias stays float either way.
+    """
     *lead, d_in = x.shape
-    out = gemm(x.reshape(-1, d_in), p["w"])
+    cfg = current_config()
+    if cfg.quantized and "q" in p:
+        algo = cfg.algo if cfg.algo != "baseline" else "ffip"
+        out = quant.quantized_dense_apply(x.reshape(-1, d_in), p["q"],
+                                          algo=algo).astype(x.dtype)
+    else:
+        out = gemm(x.reshape(-1, d_in), p["w"])
     out = out.reshape(*lead, -1)
     if "b" in p:
         out = out + p["b"]

@@ -85,7 +85,10 @@ class Model:
 
     def decode_step(self, params, token: Array, cache: dict, pos: Array,
                     ) -> Tuple[dict, Array]:
-        """One decode step. token: (B,1); pos: scalar count of cached tokens."""
+        """One decode step. token: (B,1); pos: count of cached tokens — a
+        scalar (all rows share one offset) or a (B,) int32 vector of per-slot
+        positions (continuous batching: row i writes its KV at ``pos[i]``,
+        applies rope at ``pos[i]``, and attends rows ``< pos[i] + 1``)."""
         hidden, _, new_cache = T.forward(
             params, token, self.cfg, caches=cache, cache_pos=pos)
         logits = T.logits_fn(params, hidden, self.cfg)

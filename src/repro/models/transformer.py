@@ -329,7 +329,13 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
         n_prefix = patches.shape[1]
         s = x.shape[1]
     if cache_pos is not None:
-        positions = cache_pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+        # cache_pos: scalar (shared offset — prefill / legacy decode) or a
+        # (B,) per-slot position vector (continuous-batching decode).
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        if cp.ndim == 1:
+            positions = cp[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        else:
+            positions = cp + jnp.arange(s, dtype=jnp.int32)[None, :]
         positions = jnp.broadcast_to(positions, (b, s))
     else:
         positions = jnp.arange(s, dtype=jnp.int32)

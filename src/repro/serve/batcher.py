@@ -1,22 +1,35 @@
 """Serving runtime: slot-based continuous batching over prefill/decode steps.
 
 A fixed pool of B slots; requests occupy a slot, prefill writes their prompt
-into the slot's cache region, then all active slots decode in lockstep (one
-jitted decode per step — the dry-run's ``decode_*`` cells are exactly this
-step). Finished slots (EOS or max_tokens) are immediately refilled from the
-queue — the standard continuous-batching scheme (vLLM-style, simplified to
-fixed-shape slots so XLA shapes stay static).
+into the slot's cache region, then all active slots decode in lockstep at
+their OWN positions: a ``(B,)`` position vector flows through
+``Model.decode_step``, so each slot writes its KV rows, applies rope, and
+masks attention at its true offset (mixed-length prompts decode correctly
+side by side). Finished slots (EOS or max_tokens) are immediately refilled
+from the queue — the standard continuous-batching scheme (vLLM-style,
+simplified to fixed-shape slots so XLA shapes stay static).
+
+With ``quantized=True`` the dense/attention projections of the serving
+forward route through the paper's int8 FFIP path: weights are quantized
+OFFLINE (per-output-channel, asymmetric) with beta folded into the integer
+bias (Eq. 15) and colsums precomputed; at decode time the Eq. 20 zero-point
+adjuster removes the zero-point cross terms. Activations quantize per token
+row, so batched and sequential decoding stay bit-identical.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import queue
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
+from repro.core.gemm import GemmConfig, use_gemm
 from repro.models.model import Model
 
 
@@ -36,94 +49,166 @@ class _Slot:
     remaining: int = 0
 
 
+def _cache_batch_axes(model: Model, batch: int, max_len: int):
+    """Locate the batch axis of every cache leaf STRUCTURALLY: the axis whose
+    size changes when init_cache's batch argument changes. Unlike sniffing for
+    a dim that equals the slot count, this can never confuse a stacked layer
+    (or head/state) dim that happens to equal the number of slots."""
+    c_a = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    c_b = jax.eval_shape(lambda: model.init_cache(batch + 1, max_len))
+
+    def axis(a, b):
+        return next(i for i, (sa, sb) in enumerate(zip(a.shape, b.shape))
+                    if sa != sb)
+
+    return jax.tree.map(axis, c_a, c_b)
+
+
 class BatchServer:
     """Single-host reference implementation (the multi-pod serve path lowers
     the same decode step through launch/dryrun.py)."""
 
     def __init__(self, model: Model, *, batch_slots: int, max_len: int,
-                 greedy: bool = True):
+                 greedy: bool = True, quantized: bool = False,
+                 gemm_algo: str = "ffip"):
+        if not greedy:
+            raise NotImplementedError("only greedy decoding is implemented")
         self.model = model
         self.b = batch_slots
         self.max_len = max_len
         self.cache = model.init_cache(batch_slots, max_len)
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._completed: List[Request] = []
+        self._batch_axes = _cache_batch_axes(model, batch_slots, max_len)
+        self._gemm_cfg = (GemmConfig(algo=gemm_algo, quantized=True)
+                          if quantized else None)
+        self._qparams = None
+        self._qparams_src = None
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
         # per-slot prefill: batch-1 prefill into the slot's cache rows
         self._prefill_one = jax.jit(self._prefill_impl, donate_argnums=(2,))
+        self.stats: Dict[str, Any] = {
+            "prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
+            "prefill_tokens": 0, "decode_tokens": 0,
+        }
 
+    # -- quantized decode mode --------------------------------------------
+    def _gemm_scope(self):
+        """Trace/serving-time GEMM provider scope (FFIP int8 when quantized)."""
+        if self._gemm_cfg is None:
+            return contextlib.nullcontext()
+        return use_gemm(self._gemm_cfg)
+
+    def _params_for(self, params):
+        """Float path: passthrough. Quantized: attach the offline int8 weight
+        tree (per-channel scales/zero-points, Eq. 15 folded beta, colsums)
+        once per distinct params object."""
+        if self._gemm_cfg is None:
+            return params
+        if self._qparams_src is not params:
+            self._qparams = quant.attach_quantized_weights(params)
+            self._qparams_src = params
+        return self._qparams
+
+    # -- prefill -----------------------------------------------------------
     def _prefill_impl(self, params, tokens, cache, slot_idx):
-        sub = jax.tree.map(lambda c: c, cache)  # alias; updates sliced per slot
-
         # run a batch-1 forward and scatter its cache rows into slot_idx
         one_cache = self.model.init_cache(1, self.max_len)
         new_one, logits = self.model.prefill(params, tokens, one_cache)
 
-        def put(full, one):
-            # batch axis: where the full cache has b slots and the batch-1
-            # cache has 1 (never confuses a stacked layer dim that equals b)
-            axis = next(i for i, (sf, so) in
-                        enumerate(zip(full.shape, one.shape))
-                        if sf == self.b and so == 1)
+        def put(full, one, axis):
             idx = [slice(None)] * full.ndim
             idx[axis] = slot_idx
-            return full.at[tuple(idx)].set(one.squeeze(axis=axis).astype(full.dtype))
+            return full.at[tuple(idx)].set(
+                one.squeeze(axis=axis).astype(full.dtype))
 
-        return jax.tree.map(put, sub, new_one), logits
+        return jax.tree.map(put, cache, new_one, self._batch_axes), logits
 
     def submit(self, req: Request):
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len ({self.max_len})")
         req.out_tokens = []
         self.queue.put(req)
 
+    def _finish(self, req: Request):
+        self._completed.append(req)
+
     def _admit(self, params):
         for i, slot in enumerate(self.slots):
-            if slot.req is None:
+            while slot.req is None:
                 try:
                     req = self.queue.get_nowait()
                 except queue.Empty:
                     return
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                self.cache, logits = self._prefill_one(
-                    params, toks, self.cache, i)
-                first = int(jnp.argmax(logits[0]))
+                t0 = time.perf_counter()
+                with self._gemm_scope():
+                    self.cache, logits = self._prefill_one(
+                        params, toks, self.cache, i)
+                first = int(np.argmax(jax.device_get(logits[0])))
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                self.stats["prefill_tokens"] += len(req.prompt)
                 req.out_tokens.append(first)
+                if req.max_new_tokens <= 1 or first == req.eos_id:
+                    # finished at prefill (token budget of 1, or EOS on the
+                    # first token): never occupies the slot — keep admitting.
+                    self._finish(req)
+                    continue
                 slot.req = req
-                slot.pos = len(req.prompt) + 1
-                slot.remaining = req.max_new_tokens - 1
+                slot.pos = len(req.prompt)   # prompt rows in cache; the first
+                slot.remaining = req.max_new_tokens - 1   # generated token is
+                # in flight and will be written at row `pos` by the next step
 
+    # -- decode ------------------------------------------------------------
     def step(self, params) -> int:
         """One lockstep decode over all active slots; returns #active."""
+        params = self._params_for(params)
         self._admit(params)
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
         if not active:
             return 0
         last = np.zeros((self.b, 1), np.int32)
+        pos = np.zeros((self.b,), np.int32)
         for i in active:
             last[i, 0] = self.slots[i].req.out_tokens[-1]
-        # NOTE: slots decode against their own pos; we use per-slot masks via
-        # max pos — positions beyond a slot's pos hold zeros (masked by cache
-        # validity). Single shared pos = max(pos) keeps shapes static.
-        pos = max(self.slots[i].pos for i in active)
-        self.cache, logits = self._decode(params, jnp.asarray(last),
-                                          self.cache,
-                                          jnp.asarray(pos, jnp.int32))
+            pos[i] = self.slots[i].pos
+        # per-slot position vector: slot i writes KV at row pos[i] and masks
+        # rows >= pos[i] + 1; inactive slots decode garbage at row 0, which
+        # the next prefill into that slot overwrites before it is ever read.
+        t0 = time.perf_counter()
+        with self._gemm_scope():
+            self.cache, logits = self._decode(
+                params, jnp.asarray(last), self.cache,
+                jnp.asarray(pos, jnp.int32))
+        logits_h = jax.device_get(logits)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_tokens"] += len(active)
+        self.stats["steps"] += 1
         for i in active:
             slot = self.slots[i]
-            nxt = int(jnp.argmax(logits[i]))
+            nxt = int(np.argmax(logits_h[i]))
             slot.req.out_tokens.append(nxt)
             slot.pos += 1
             slot.remaining -= 1
             if slot.remaining <= 0 or nxt == slot.req.eos_id:
+                self._finish(slot.req)
                 slot.req = None   # slot freed -> next _admit refills it
         return len(active)
 
-    def run_until_drained(self, params, *, max_steps: int = 10_000) -> List[Request]:
-        done: List[Request] = []
-        seen: Dict[int, Request] = {}
+    def run_until_drained(self, params, *, max_steps: int = 10_000,
+                          ) -> List[Request]:
+        """Step until the queue and all slots drain. Returns the finished
+        requests in COMPLETION order — including requests admitted and
+        completed within a single step (e.g. max_new_tokens=1). ``stats``
+        describe this run only (reset here alongside the completion list)."""
+        self._completed = []
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
+                      "prefill_tokens": 0, "decode_tokens": 0}
         for _ in range(max_steps):
-            for s in self.slots:
-                if s.req is not None:
-                    seen[s.req.rid] = s.req
             if self.step(params) == 0 and self.queue.empty():
                 break
-        return list(seen.values())
+        return self._completed

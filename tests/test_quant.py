@@ -73,6 +73,80 @@ def test_quantized_dense_ffip_close_to_float():
     assert rms < 0.05, rms
 
 
+def test_zero_point_adjuster_per_channel():
+    """Eq. (20) with per-channel weight zero-points: AR_ij = zb_j*rowsum(A)_i."""
+    aq = jax.random.randint(jax.random.PRNGKey(5), (6, 10), -128, 128,
+                            dtype=jnp.int32).astype(jnp.int8)
+    zb = jnp.asarray([3, -7, 0, 11, 2], jnp.int32)
+    got = quant.zero_point_adjuster(aq, zb)
+    rowsum = np.sum(np.asarray(aq, np.int32), axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), np.outer(rowsum, zb))
+    # scalar zero-point still broadcasts
+    got_s = quant.zero_point_adjuster(aq, 13)
+    np.testing.assert_array_equal(np.asarray(got_s)[:, 0], rowsum * 13)
+
+
+def test_int_gemm_ffip_per_channel_zero_points_bit_exact():
+    """Per-channel zb (and per-row za) through the wired Eq. 20 adjuster."""
+    ka, kb, kz = jax.random.split(jax.random.PRNGKey(6), 3)
+    aq = jax.random.randint(ka, (9, 14), -128, 128, dtype=jnp.int32).astype(jnp.int8)
+    bq = jax.random.randint(kb, (14, 7), -128, 128, dtype=jnp.int32).astype(jnp.int8)
+    zb = jax.random.randint(kz, (7,), -30, 30, dtype=jnp.int32)
+    za = jax.random.randint(kz, (9, 1), -30, 30, dtype=jnp.int32)
+    want = quant.int_gemm_baseline(aq, bq, za, zb)
+    for algo in ("fip", "ffip"):
+        got = quant.int_gemm_ffip(aq, bq, za, zb, algo=algo)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_prepare_quantized_dense_offline_terms():
+    """The offline dict matches what the algebra needs: beta(W_q) folded
+    (Eq. 15) and colsum(W_q); stacked (L, K, N) weights calibrate per layer."""
+    w = jax.random.normal(jax.random.PRNGKey(7), (3, 16, 6)) * 0.3
+    q = quant.prepare_quantized_dense(w)
+    q32 = np.asarray(q["qw"], np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(q["neg_beta"]),
+        -np.sum(q32[:, 0::2, :] * q32[:, 1::2, :], axis=1))
+    np.testing.assert_array_equal(np.asarray(q["colsum"]), q32.sum(axis=1))
+    # per-layer slices equal independent per-layer preparation
+    q0 = quant.prepare_quantized_dense(w[1])
+    for key in q:
+        np.testing.assert_array_equal(np.asarray(q[key][1]),
+                                      np.asarray(q0[key]))
+
+
+def test_quantized_dense_apply_ffip_equals_int_baseline_and_float():
+    """Serving-path apply: FFIP ints == baseline ints (bit-exact accumulator)
+    and the dequantized result tracks the float GEMM."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(8))
+    x = jax.random.normal(kx, (12, 32))
+    w = jax.random.normal(kw, (32, 10)) * 0.2
+    q = quant.prepare_quantized_dense(w)
+    got_ffip = quant.quantized_dense_apply(x, q, algo="ffip")
+    got_fip = quant.quantized_dense_apply(x, q, algo="fip")
+    got_base = quant.quantized_dense_apply(x, q, algo="baseline")
+    np.testing.assert_array_equal(np.asarray(got_ffip), np.asarray(got_base))
+    np.testing.assert_array_equal(np.asarray(got_fip), np.asarray(got_base))
+    rms = float(jnp.sqrt(jnp.mean((got_ffip - x @ w) ** 2)))
+    assert rms < 0.05, rms
+
+
+def test_attach_quantized_weights_walks_stacked_tree():
+    params = {
+        "embed": {"table": jnp.ones((8, 4))},
+        "unembed": {"w": jnp.ones((4, 8))},            # skipped: logits stay float
+        "layers": {"attn": {"wq": {"w": jnp.ones((2, 4, 6))}},
+                   "odd": {"w": jnp.ones((3, 6))}},    # odd K: float fallback
+    }
+    out = quant.attach_quantized_weights(params)
+    assert "q" in out["layers"]["attn"]["wq"]
+    assert out["layers"]["attn"]["wq"]["q"]["qw"].shape == (2, 4, 6)
+    assert "q" not in out["layers"]["odd"]
+    assert "q" not in out["unembed"]
+    assert set(out["embed"]) == {"table"}
+
+
 def test_quantized_ffip_equals_quantized_baseline_bitexact():
     """Same quantized network arithmetic, both orders — identical ints."""
     kx, kw = jax.random.split(jax.random.PRNGKey(4))

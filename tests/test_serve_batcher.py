@@ -1,0 +1,141 @@
+"""Continuous-batching correctness: per-slot positions, slot churn, EOS,
+token budgets — and bit-identity of batched vs. one-at-a-time sequential
+greedy generation, for both the float and the quantized int8 FFIP paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serve.batcher import BatchServer, Request
+
+MAX_LEN = 48
+
+
+def _setup(arch, seed=0):
+    cfg = configs.smoke_config(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(l,)) for l in lens]
+
+
+def _sequential(model, params, prompts, max_new, *, eos_id=-1,
+                quantized=False):
+    """One-at-a-time reference: a single 1-slot server, one request at a
+    time (also exercises cache-row reuse across consecutive requests)."""
+    srv = BatchServer(model, batch_slots=1, max_len=MAX_LEN,
+                      quantized=quantized)
+    outs = []
+    for i, p in enumerate(prompts):
+        mx = max_new[i] if isinstance(max_new, (list, tuple)) else max_new
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=mx, eos_id=eos_id))
+        done = srv.run_until_drained(params)
+        assert len(done) == 1
+        outs.append(list(done[0].out_tokens))
+    return outs
+
+
+def _batched(model, params, prompts, max_new, *, slots, eos_id=-1,
+             quantized=False):
+    srv = BatchServer(model, batch_slots=slots, max_len=MAX_LEN,
+                      quantized=quantized)
+    for i, p in enumerate(prompts):
+        mx = max_new[i] if isinstance(max_new, (list, tuple)) else max_new
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=mx, eos_id=eos_id))
+    done = srv.run_until_drained(params)
+    return done
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "deepseek-v2-lite-16b"])
+def test_mixed_lengths_bit_identical_to_sequential(arch):
+    """4 mixed-length prompts decoding side by side in 4 slots produce the
+    SAME tokens as one-at-a-time generation (per-slot position contract)."""
+    cfg, model, params = _setup(arch)
+    prompts = _prompts(cfg, [3, 7, 5, 9])
+    want = _sequential(model, params, prompts, 5)
+    done = _batched(model, params, prompts, 5, slots=4)
+    assert len(done) == len(prompts)
+    got = {r.rid: r.out_tokens for r in done}
+    for i in range(len(prompts)):
+        assert got[i] == want[i], (arch, i, got[i], want[i])
+
+
+def test_slot_churn_more_requests_than_slots():
+    """7 requests through 2 slots (mixed lengths AND mixed budgets): nothing
+    dropped, every budget honored exactly, tokens == sequential."""
+    cfg, model, params = _setup("minicpm-2b")
+    lens = [3, 6, 4, 8, 5, 3, 7]
+    budgets = [4, 1, 3, 2, 5, 1, 4]
+    prompts = _prompts(cfg, lens, seed=1)
+    want = _sequential(model, params, prompts, budgets)
+    done = _batched(model, params, prompts, budgets, slots=2)
+    assert sorted(r.rid for r in done) == list(range(7))
+    for r in done:
+        assert len(r.out_tokens) == budgets[r.rid], (r.rid, r.out_tokens)
+        assert r.out_tokens == want[r.rid], r.rid
+
+
+def test_max_new_tokens_one_exact_and_not_dropped():
+    """max_new_tokens=1 requests finish at prefill with EXACTLY one token and
+    are still returned by run_until_drained (the admitted-and-completed-
+    within-one-step drop regression)."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [4, 4, 4, 4, 4], seed=2)
+    done = _batched(model, params, prompts, 1, slots=2)
+    assert sorted(r.rid for r in done) == list(range(5))
+    for r in done:
+        assert len(r.out_tokens) == 1, (r.rid, r.out_tokens)
+
+
+def test_eos_honored_including_first_prefill_token():
+    """eos_id terminates the stream wherever it appears — including on the
+    very first token produced by prefill — and frees the slot for the queue."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [4, 6, 5], seed=3)
+    free = _batched(model, params, prompts, 6, slots=2)
+    ref = {r.rid: list(r.out_tokens) for r in free}
+    # pick rid 0's first token as EOS: rid 0 must now stop right at prefill
+    eos = ref[0][0]
+    done = _batched(model, params, prompts, 6, slots=2, eos_id=eos)
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    got = {r.rid: r.out_tokens for r in done}
+    assert got[0] == [eos]
+    for rid in (1, 2):
+        full = ref[rid]
+        want = full[:full.index(eos) + 1] if eos in full else full
+        assert got[rid] == want, (rid, got[rid], want)
+
+
+def test_completion_order():
+    """run_until_drained returns requests in completion order."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [4, 4, 4], seed=4)
+    done = _batched(model, params, prompts, [1, 6, 2], slots=2)
+    assert [r.rid for r in done] == [0, 2, 1]
+
+
+def test_quantized_int8_ffip_bit_identical_to_sequential():
+    """The quantized decode path (per-token activation quant + offline
+    per-channel weights) is batch-size invariant: batched == sequential."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [3, 8, 5, 6], seed=5)
+    want = _sequential(model, params, prompts, 4, quantized=True)
+    done = _batched(model, params, prompts, 4, slots=3, quantized=True)
+    got = {r.rid: r.out_tokens for r in done}
+    for i in range(len(prompts)):
+        assert got[i] == want[i], (i, got[i], want[i])
+        assert all(0 <= t < cfg.vocab for t in got[i])
+
+
+def test_submit_rejects_overlong_request():
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        srv.submit(Request(rid=0, prompt=np.zeros(6, np.int64),
+                           max_new_tokens=4))

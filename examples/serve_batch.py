@@ -4,10 +4,11 @@
 
 Eight requests with different prompt lengths and token budgets stream through
 four decode slots; each slot decodes at its OWN position (a (B,) position
-vector flows through Model.decode_step) and finished slots are immediately
-refilled (the decode step lowered in the dry-run's ``decode_*`` cells is
-exactly the step used here). Pass quantized=True to BatchServer to route the
-projections through the int8 FFIP path instead."""
+vector flows through the fused decode program) and finished slots are
+immediately refilled. Prompts prefill in power-of-2 length buckets, sampling
+runs on device (only int32 ids reach the host), and ``decode_chunk`` fuses
+several decode steps into one dispatch. Pass quantized=True to BatchServer to
+route the projections through the int8 FFIP path instead."""
 import time
 
 import jax
@@ -22,7 +23,7 @@ def main():
     cfg = configs.smoke_config(configs.get_config("minicpm-2b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    srv = BatchServer(model, batch_slots=4, max_len=64)
+    srv = BatchServer(model, batch_slots=4, max_len=64, decode_chunk=2)
 
     rng = np.random.default_rng(0)
     reqs = [
@@ -38,7 +39,7 @@ def main():
     steps = 0
     while True:
         n = srv.step(params)
-        if n == 0 and srv.queue.empty():
+        if n == 0 and not srv.has_queued():
             break
         steps += 1
     dt = time.perf_counter() - t0

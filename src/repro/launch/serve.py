@@ -1,12 +1,15 @@
 """Serving launcher: per-slot continuous batching over any arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
-        --requests 8 --slots 4
+        --requests 8 --slots 4 --decode-chunk 4
 
 ``--quantized`` routes the dense/attention projections through the int8 FFIP
 decode path (offline-quantized weights, Eq. 15 folded beta, Eq. 20 zero-point
-adjuster). Exits non-zero if any request is dropped or over/under-generates,
-so this doubles as the CI batcher-regression smoke.
+adjuster). ``--decode-chunk N`` fuses N decode steps into one dispatch
+(sampling stays on device either way); bucketed batched prefill is on by
+default (``--no-prefill-buckets`` forces the per-slot fallback). Exits
+non-zero if any request is dropped or over/under-generates, so this doubles
+as the CI batcher-regression smoke.
 """
 from __future__ import annotations
 
@@ -31,6 +34,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--quantized", action="store_true",
                     help="int8 FFIP decode path (offline weight quantization)")
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="decode steps fused into one dispatch (lax.scan)")
+    ap.add_argument("--no-prefill-buckets", action="store_true",
+                    help="disable bucketed batched prefill (per-slot fallback)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -39,7 +46,8 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     srv = BatchServer(model, batch_slots=args.slots, max_len=args.max_len,
-                      quantized=args.quantized)
+                      quantized=args.quantized, decode_chunk=args.decode_chunk,
+                      prefill_buckets=not args.no_prefill_buckets)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(3, 12, args.requests)
@@ -55,11 +63,18 @@ def main():
     mode = "int8-ffip" if args.quantized else "float"
     st = srv.stats
     print(f"[{mode}] {len(done)}/{args.requests} requests / {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s host-side)")
-    print(f"  prefill {st['prefill_s']:.2f}s ({st['prefill_tokens']} tok), "
-          f"decode {st['decode_s']:.2f}s over {st['steps']} steps "
-          f"({st['decode_tokens']} tok), "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s host-side, "
+          f"decode_chunk={args.decode_chunk})")
+    print(f"  prefill {st['prefill_s']:.2f}s ({st['prefill_tokens']} tok / "
+          f"{st['prefill_dispatches']} dispatches), "
+          f"decode {st['decode_s']:.2f}s over {st['steps']} steps / "
+          f"{st['decode_dispatches']} dispatches ({st['decode_tokens']} tok), "
           f"host/other {dt - st['prefill_s'] - st['decode_s']:.2f}s")
+    print(f"  compiles: prefill={srv.compiles['prefill']} "
+          f"decode={srv.compiles['decode']}, "
+          f"host transfer {st['host_bytes_prefill'] + st['host_bytes_decode']}"
+          f" B total "
+          f"(sampling on device: ids only, never (B, V) logits)")
 
     # regression gates: nothing dropped, exact token budgets, valid ids
     assert len(done) == args.requests, "run_until_drained dropped requests"

@@ -33,7 +33,8 @@ def gqa_init(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
-def _cache_write(buf: Array, new: Array, cache_pos) -> Array:
+def _cache_write(buf: Array, new: Array, cache_pos,
+                 write_mask: Optional[Array] = None) -> Array:
     """Write ``new`` (B, s, ...) rows into ``buf`` (B, S_max, ...) at
     ``cache_pos``.
 
@@ -41,14 +42,32 @@ def _cache_write(buf: Array, new: Array, cache_pos) -> Array:
     dynamic slice. ``(B,)`` vector: per-slot offsets (continuous-batching
     decode) — one dynamic slice per batch row via vmap, lowering to a batched
     scatter. Slot i's row lands at ``buf[i, cache_pos[i]]``.
+
+    ``write_mask`` (optional, (B,) bool): rows with a False mask keep their
+    existing cache content — the bucketed batched prefill runs a full-width
+    forward straight over the SHARED slot cache and only commits the rows
+    being admitted, so live slots decoding next door are untouched. The
+    masked form still lowers to one dynamic_update_slice per leaf (the slice
+    is re-read, selected, and written back), never a per-leaf scatter.
     """
     new = new.astype(buf.dtype)
     pos = jnp.asarray(cache_pos, jnp.int32)
     if pos.ndim == 0:
+        if write_mask is not None:
+            cur = jax.lax.dynamic_slice_in_dim(buf, pos, new.shape[1], axis=1)
+            keep = write_mask.reshape((-1,) + (1,) * (new.ndim - 1))
+            new = jnp.where(keep, new, cur)
         return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=1)
-    return jax.vmap(
-        lambda row, n, p: jax.lax.dynamic_update_slice_in_dim(row, n, p, axis=0)
-    )(buf, new, pos)
+
+    def one(row, n, p, m=None):
+        if m is not None:
+            cur = jax.lax.dynamic_slice_in_dim(row, p, n.shape[0], axis=0)
+            n = jnp.where(m, n, cur)
+        return jax.lax.dynamic_update_slice_in_dim(row, n, p, axis=0)
+
+    if write_mask is not None:
+        return jax.vmap(one)(buf, new, pos, write_mask)
+    return jax.vmap(one)(buf, new, pos)
 
 
 def _cache_end(cache_pos, s: int) -> Array:
@@ -132,11 +151,14 @@ def _sdpa(q: Array, k: Array, v: Array, keep: Optional[Array]) -> Array:
 def gqa_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
               window=0, rope_theta=None, causal: bool = True,
               cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
+              cache_write_mask: Optional[Array] = None,
               prefill: bool = False) -> Tuple[Array, Optional[dict]]:
     """Full/prefill when cache is None; single-step decode when cache given.
 
     cache = {"k": (B, S_max, KV, hd), "v": ...}; cache_pos: scalar int32 —
     the number of tokens already in the cache (q is written at that offset).
+    cache_write_mask: optional (B,) bool — rows with False keep their cached
+    K/V (bucketed prefill into a shared slot cache).
     """
     b, s, d = x.shape
     hd = cfg.hd
@@ -159,18 +181,18 @@ def gqa_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
             out = _sdpa(q, k, v, keep)
         new_cache = None
     elif prefill and cfg.attention_impl == "flash":
-        # prefill into an EMPTY cache: attention over the prompt == flash
+        # prefill into EMPTY cache rows: attention over the prompt == flash
         # self-attention; k/v written at offset 0 (32k cells never touch an
         # (S,S) score tensor this way — §Perf)
-        k_cache = _cache_write(cache["k"], k, cache_pos)
-        v_cache = _cache_write(cache["v"], v, cache_pos)
+        k_cache = _cache_write(cache["k"], k, cache_pos, cache_write_mask)
+        v_cache = _cache_write(cache["v"], v, cache_pos, cache_write_mask)
         out = _flash_sdpa(q, k, v, window, causal)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         # decode: write this step's k/v at cache_pos (per-slot rows when
         # cache_pos is a (B,) vector), attend over the cache
-        k_cache = _cache_write(cache["k"], k, cache_pos)
-        v_cache = _cache_write(cache["v"], v, cache_pos)
+        k_cache = _cache_write(cache["k"], k, cache_pos, cache_write_mask)
+        v_cache = _cache_write(cache["v"], v, cache_pos, cache_write_mask)
         s_max = k_cache.shape[1]
         k_pos = jnp.arange(s_max, dtype=jnp.int32)
         valid = k_pos[None, :] < _cache_end(cache_pos, s)
@@ -209,10 +231,12 @@ def _mla_kv(p, c_kv: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
 def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
               window=0, cache: Optional[dict] = None,
               cache_pos: Optional[Array] = None,
+              cache_write_mask: Optional[Array] = None,
               prefill: bool = False) -> Tuple[Array, Optional[dict]]:
     """MLA: the KV cache stores only (c_kv, k_rope) — rank-512+64 per token.
 
-    cache = {"c_kv": (B, S_max, r), "k_rope": (B, S_max, rope_hd)}.
+    cache = {"c_kv": (B, S_max, r), "k_rope": (B, S_max, rope_hd)};
+    cache_write_mask as in :func:`gqa_apply`.
     """
     m = cfg.mla
     b, s, d = x.shape
@@ -233,9 +257,10 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         new_cache = None
         if cache is not None:   # prefill: write compressed cache, flash attn
             new_cache = {
-                "c_kv": _cache_write(cache["c_kv"], c_kv, cache_pos),
+                "c_kv": _cache_write(cache["c_kv"], c_kv, cache_pos,
+                                     cache_write_mask),
                 "k_rope": _cache_write(cache["k_rope"], k_rope[:, :, 0, :],
-                                       cache_pos),
+                                       cache_pos, cache_write_mask),
             }
         if cfg.attention_impl == "flash":
             # PERF (§Perf deepseek iter-1): flash for MLA — concat nope+rope
@@ -254,8 +279,9 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         # ratio 0.00 in the baseline roofline), absorb W_uk into the query
         # and W_uv into the context: attention runs entirely in the rank-r
         # latent space against the compressed cache.
-        c_cache = _cache_write(cache["c_kv"], c_kv, cache_pos)
-        r_cache = _cache_write(cache["k_rope"], k_rope[:, :, 0, :], cache_pos)
+        c_cache = _cache_write(cache["c_kv"], c_kv, cache_pos, cache_write_mask)
+        r_cache = _cache_write(cache["k_rope"], k_rope[:, :, 0, :], cache_pos,
+                               cache_write_mask)
         s_max = c_cache.shape[1]
         w_ukv = p["w_ukv"]["w"].reshape(m.kv_lora_rank, h,
                                         m.nope_head_dim + m.v_head_dim)

@@ -94,6 +94,67 @@ class Model:
         logits = T.logits_fn(params, hidden, self.cfg)
         return new_cache, logits[:, 0]
 
+    def sample_step(self, params, token: Array, cache: dict, pos: Array,
+                    ) -> Tuple[dict, Array]:
+        """decode_step with greedy sampling fused into the device program:
+        returns (cache, (B,) int32 token ids) — the (B, V) float logits never
+        leave the device."""
+        hidden, _, new_cache = T.forward(
+            params, token, self.cfg, caches=cache, cache_pos=pos)
+        return new_cache, T.sample_fn(params, hidden, self.cfg)[:, 0]
+
+    def sample_steps(self, params, token: Array, cache: dict, pos: Array,
+                     live: Array, remaining: Array, eos_id: Array,
+                     *, steps: int) -> Tuple[dict, Array]:
+        """Fused multi-step greedy decode: a ``lax.scan`` over ``steps`` decode
+        steps that feeds each sampled token straight back on device — one host
+        round-trip (and one (steps, B) int32 transfer) per ``steps`` tokens.
+
+        token/pos/remaining/eos_id: (B,) int32; live: (B,) bool. Per-slot
+        termination is tracked ON DEVICE so the scan is bit-identical to
+        stepping one token at a time: a slot that hits EOS or exhausts its
+        budget mid-chunk FREEZES — its pos and token stop advancing, so every
+        remaining step re-writes the same K/V values into the same cache row
+        (k/v depend only on (token, position), not on the cache), leaving the
+        cache bit-identical to sequential decode. The host replays the same
+        (eos, remaining) bookkeeping on the returned (steps, B) token block to
+        decide what was actually emitted.
+        """
+        def body(carry, _):
+            cache, tok, pos, live, rem = carry
+            cache, nxt = self.sample_step(params, tok[:, None], cache, pos)
+            rem = jnp.where(live, rem - 1, rem)
+            finished = live & ((nxt == eos_id) | (rem <= 0))
+            live2 = live & ~finished
+            pos2 = jnp.where(live2, pos + 1, pos)
+            tok2 = jnp.where(live2, nxt, tok)
+            return (cache, tok2, pos2, live2, rem), nxt
+
+        (cache, *_), toks = jax.lax.scan(
+            body, (cache, token, pos, live, remaining), None, length=steps)
+        return cache, toks
+
+    def prefill_sample(self, params, tokens: Array, cache: dict,
+                       lengths: Array, slot_mask: Array,
+                       ) -> Tuple[dict, Array]:
+        """Bucketed batched prefill straight into the SHARED slot cache.
+
+        tokens: (B, L) prompts right-padded to the bucket length L;
+        lengths: (B,) true prompt lengths; slot_mask: (B,) bool — rows being
+        admitted. Masked-out rows (live or idle slots) keep their cache
+        content bit-for-bit; admitted rows get their prompt K/V written at
+        rows [0, L) (pad rows hold garbage but sit beyond the row's valid
+        region, so decode masks them until it overwrites them). Returns
+        (cache, (B,) int32 first sampled token per row — argmax at each row's
+        OWN last prompt position, on device)."""
+        b = tokens.shape[0]
+        hidden, _, new_cache = T.forward(
+            params, tokens, self.cfg, caches=cache,
+            cache_pos=jnp.zeros((), jnp.int32),
+            cache_write_mask=slot_mask, is_prefill=True)
+        last = hidden[jnp.arange(b), lengths - 1]          # (B, d)
+        return new_cache, T.sample_fn(params, last[:, None], self.cfg)[:, 0]
+
 
 def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

@@ -69,6 +69,7 @@ def block_init(key, cfg: ModelConfig, dtype, *, kind: str) -> dict:
 def block_apply(p: dict, x: Array, *, cfg: ModelConfig, kind: str,
                 positions: Array, window=0, theta=None, causal: bool = True,
                 cache: Optional[dict] = None, cache_pos=None,
+                cache_write_mask: Optional[Array] = None,
                 enc: Optional[Array] = None,
                 cross_kv: Optional[dict] = None, prefill: bool = False,
                 ) -> Tuple[Array, Optional[dict], Array]:
@@ -89,7 +90,8 @@ def block_apply(p: dict, x: Array, *, cfg: ModelConfig, kind: str,
                    prefill=prefill))
     h, new_cache = attn_fn(p["attn"], norm_apply(x, p["ln1"], cfg), cfg=cfg,
                            positions=positions, window=window, cache=cache,
-                           cache_pos=cache_pos)
+                           cache_pos=cache_pos,
+                           cache_write_mask=cache_write_mask)
     x = x + h
     if kind == "encdec":
         xh = A.cross_apply(p["xattn"], norm_apply(x, p["ln_x"], cfg),
@@ -219,7 +221,8 @@ def _maybe_remat(body, cfg: ModelConfig):
 
 def _scan_group(p_stacked, x, *, cfg, kind, positions, windows=None,
                 thetas=None, causal=True, caches=None, cache_pos=None,
-                enc=None, cross_kvs=None, prefill=False):
+                cache_write_mask=None, enc=None, cross_kvs=None,
+                prefill=False):
     """lax.scan over a stacked layer group. caches/cross_kvs are stacked on
     the leading (layer) axis when present."""
     n = jax.tree_util.tree_leaves(p_stacked)[0].shape[0]
@@ -243,7 +246,8 @@ def _scan_group(p_stacked, x, *, cfg, kind, positions, windows=None,
             c, ckv = None, None
         x, new_c, aux = block_apply(
             p, x, cfg=cfg, kind=kind, positions=positions, window=w, theta=th,
-            causal=causal, cache=c, cache_pos=cache_pos, enc=enc,
+            causal=causal, cache=c, cache_pos=cache_pos,
+            cache_write_mask=cache_write_mask, enc=enc,
             cross_kv=ckv, prefill=prefill)
         return (x, aux_acc + aux), new_c
 
@@ -313,12 +317,16 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
             frames: Optional[Array] = None,
             patches: Optional[Array] = None,
             caches: Optional[dict] = None, cache_pos=None,
+            cache_write_mask: Optional[Array] = None,
             is_prefill: bool = False,
             ) -> Tuple[Array, Array, Optional[dict]]:
     """Token ids -> final hidden states. Returns (hidden, aux_loss, new_caches).
 
     * train/prefill: caches=None / caches=zeros, full sequence.
     * decode: tokens (B,1), caches + cache_pos set.
+    * cache_write_mask: optional (B,) bool — batch rows with False leave the
+      cache untouched (bucketed prefill runs over the SHARED slot cache and
+      only commits the admitted rows; live slots keep their K/V).
     * frames: whisper encoder stub embeddings; patches: vlm prefix embeddings.
     """
     x = L.embed(tokens, params["embed"])
@@ -366,7 +374,8 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
             x, aux, new_c = _scan_group(
                 p_stacked=params[name], x=x, cfg=cfg, kind=kind,
                 positions=positions, windows=win, thetas=theta,
-                caches=grp_cache, cache_pos=cache_pos, enc=enc,
+                caches=grp_cache, cache_pos=cache_pos,
+                cache_write_mask=cache_write_mask, enc=enc,
                 cross_kvs=grp_cross, prefill=is_prefill)
             aux_total = aux_total + aux
             if new_caches is not None:
@@ -385,6 +394,14 @@ def logits_fn(params, hidden: Array, cfg: ModelConfig) -> Array:
     if cfg.tie_embeddings:
         return L.unembed(hidden, params["embed"])
     return L.dense(hidden, params["unembed"])
+
+
+def sample_fn(params, hidden: Array, cfg: ModelConfig) -> Array:
+    """Greedy sampling fused into the device program: unembed + argmax in one
+    trace, so only (..., ) int32 token ids ever cross to the host — never the
+    (..., V) float logits (the serving hot path's per-step host transfer drops
+    from B×V floats to B int32s)."""
+    return jnp.argmax(logits_fn(params, hidden, cfg), axis=-1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -2,25 +2,45 @@
 
 A fixed pool of B slots; requests occupy a slot, prefill writes their prompt
 into the slot's cache region, then all active slots decode in lockstep at
-their OWN positions: a ``(B,)`` position vector flows through
-``Model.decode_step``, so each slot writes its KV rows, applies rope, and
-masks attention at its true offset (mixed-length prompts decode correctly
-side by side). Finished slots (EOS or max_tokens) are immediately refilled
-from the queue — the standard continuous-batching scheme (vLLM-style,
-simplified to fixed-shape slots so XLA shapes stay static).
+their OWN positions: a ``(B,)`` position vector flows through the decode
+program, so each slot writes its KV rows, applies rope, and masks attention
+at its true offset (mixed-length prompts decode correctly side by side).
+Finished slots (EOS or max_tokens) are immediately refilled from the queue —
+the standard continuous-batching scheme (vLLM-style, simplified to
+fixed-shape slots so XLA shapes stay static).
+
+Hot-path discipline (the paper's Eq. 15 / §4.4 move — hoist everything off
+the critical path — applied to serving):
+
+* **On-device sampling**: the decode program ends in a fused argmax
+  (``Model.sample_steps``); only ``(chunk, B)`` int32 token ids cross to the
+  host per dispatch, never the ``(B, V)`` float logits.
+* **Fused multi-step decode**: ``decode_chunk`` steps run as one
+  ``lax.scan`` that feeds sampled tokens back on device, with per-slot
+  position/remaining/EOS masking — a finished slot freezes and re-writes its
+  own cache row with identical values, so the cache (and therefore every
+  emitted token) stays bit-identical to one-step-at-a-time decode while host
+  round-trips per token drop by 1/chunk.
+* **Bucketed batched prefill**: prompts are padded to power-of-2 length
+  buckets and same-bucket requests prefill together in ONE dispatch, written
+  straight into the shared slot cache via masked ``dynamic_update_slice``
+  (``Model.prefill_sample``) — no batch-1 scratch cache, no per-leaf
+  scatter, and the prefill jit cache is bounded to O(log max_len) entries
+  instead of one per distinct prompt length.
 
 With ``quantized=True`` the dense/attention projections of the serving
 forward route through the paper's int8 FFIP path: weights are quantized
 OFFLINE (per-output-channel, asymmetric) with beta folded into the integer
 bias (Eq. 15) and colsums precomputed; at decode time the Eq. 20 zero-point
 adjuster removes the zero-point cross terms. Activations quantize per token
-row, so batched and sequential decoding stay bit-identical.
+row, so batched, bucketed, and chunk-fused decoding all stay bit-identical
+to sequential decoding.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
-import queue
 import time
 from typing import Any, Dict, List, Optional
 
@@ -31,6 +51,8 @@ import numpy as np
 from repro.core import quant
 from repro.core.gemm import GemmConfig, use_gemm
 from repro.models.model import Model
+
+_MIN_BUCKET = 4
 
 
 @dataclasses.dataclass
@@ -64,34 +86,72 @@ def _cache_batch_axes(model: Model, batch: int, max_len: int):
     return jax.tree.map(axis, c_a, c_b)
 
 
+def _cache_supports_buckets(model: Model, batch: int, max_len: int) -> bool:
+    """Bucketed prefill needs every cache leaf to have a sequence axis (one
+    that scales with max_len) so masked prefill-at-offset-0 commits exactly
+    the prompt rows. SSM/hybrid state and encoder cross-KV leaves don't
+    (their state is a running summary, not addressable rows), so those
+    families fall back to the per-slot scatter prefill."""
+    c_a = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    c_b = jax.eval_shape(lambda: model.init_cache(batch, max_len + 1))
+    return all(
+        any(sa != sb for sa, sb in zip(a.shape, b.shape))
+        for a, b in zip(jax.tree.leaves(c_a), jax.tree.leaves(c_b)))
+
+
 class BatchServer:
     """Single-host reference implementation (the multi-pod serve path lowers
-    the same decode step through launch/dryrun.py)."""
+    the same decode step through launch/dryrun.py).
+
+    ``decode_chunk`` is the fused-decode knob: steps per decode dispatch
+    (1 = classic one-round-trip-per-token lockstep). ``prefill_buckets``
+    enables bucketed batched prefill where the cache layout supports it.
+    """
 
     def __init__(self, model: Model, *, batch_slots: int, max_len: int,
                  greedy: bool = True, quantized: bool = False,
-                 gemm_algo: str = "ffip"):
+                 gemm_algo: str = "ffip", decode_chunk: int = 1,
+                 prefill_buckets: bool = True):
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
+        if decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
         self.model = model
         self.b = batch_slots
         self.max_len = max_len
+        self.decode_chunk = decode_chunk
         self.cache = model.init_cache(batch_slots, max_len)
         self.slots = [_Slot() for _ in range(batch_slots)]
-        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._queue: "collections.deque[Request]" = collections.deque()
         self._completed: List[Request] = []
-        self._batch_axes = _cache_batch_axes(model, batch_slots, max_len)
+        self._bucketed = (prefill_buckets
+                          and _cache_supports_buckets(model, batch_slots,
+                                                      max_len))
+        self._batch_axes = (None if self._bucketed else
+                            _cache_batch_axes(model, batch_slots, max_len))
         self._gemm_cfg = (GemmConfig(algo=gemm_algo, quantized=True)
                           if quantized else None)
         self._qparams = None
         self._qparams_src = None
-        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
-        # per-slot prefill: batch-1 prefill into the slot's cache rows
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        # bucketed: one jit entry per power-of-2 prompt bucket.
+        # fallback: batch-1 prefill scattered into the slot's cache rows
+        # (one entry per distinct prompt length).
+        self._prefill_bucket = jax.jit(self._prefill_bucket_impl,
+                                       donate_argnums=(2,))
         self._prefill_one = jax.jit(self._prefill_impl, donate_argnums=(2,))
-        self.stats: Dict[str, Any] = {
-            "prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
-            "prefill_tokens": 0, "decode_tokens": 0,
-        }
+        # trace counts survive run_until_drained's stats reset: the jit cache
+        # is a server-lifetime property (the compile-count regression test and
+        # serve_bench read these directly).
+        self.compiles: Dict[str, int] = {"prefill": 0, "decode": 0}
+        self.stats: Dict[str, Any] = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, Any]:
+        return {"prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
+                "prefill_tokens": 0, "decode_tokens": 0,
+                "prefill_dispatches": 0, "decode_dispatches": 0,
+                "host_bytes_prefill": 0, "host_bytes_decode": 0}
 
     # -- quantized decode mode --------------------------------------------
     def _gemm_scope(self):
@@ -111,9 +171,20 @@ class BatchServer:
             self._qparams_src = params
         return self._qparams
 
-    # -- prefill -----------------------------------------------------------
+    # -- device programs ---------------------------------------------------
+    def _decode_impl(self, params, last, cache, pos, live, rem, eos):
+        self.compiles["decode"] += 1    # side effect runs at trace time only
+        return self.model.sample_steps(params, last, cache, pos, live, rem,
+                                       eos, steps=self.decode_chunk)
+
+    def _prefill_bucket_impl(self, params, tokens, cache, lengths, mask):
+        self.compiles["prefill"] += 1   # once per bucket length
+        return self.model.prefill_sample(params, tokens, cache, lengths, mask)
+
     def _prefill_impl(self, params, tokens, cache, slot_idx):
-        # run a batch-1 forward and scatter its cache rows into slot_idx
+        # fallback (SSM/hybrid/enc-dec caches): run a batch-1 forward and
+        # scatter its cache rows into slot_idx; argmax fused on device.
+        self.compiles["prefill"] += 1   # once per distinct prompt length
         one_cache = self.model.init_cache(1, self.max_len)
         new_one, logits = self.model.prefill(params, tokens, one_cache)
 
@@ -123,7 +194,15 @@ class BatchServer:
             return full.at[tuple(idx)].set(
                 one.squeeze(axis=axis).astype(full.dtype))
 
-        return jax.tree.map(put, cache, new_one, self._batch_axes), logits
+        cache = jax.tree.map(put, cache, new_one, self._batch_axes)
+        return cache, jnp.argmax(logits[0]).astype(jnp.int32)
+
+    # -- prefill -----------------------------------------------------------
+    def _bucket_len(self, n: int) -> int:
+        b = _MIN_BUCKET
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
 
     def submit(self, req: Request):
         if len(req.prompt) + req.max_new_tokens > self.max_len:
@@ -132,71 +211,150 @@ class BatchServer:
                 f"max_new_tokens ({req.max_new_tokens}) exceeds "
                 f"max_len ({self.max_len})")
         req.out_tokens = []
-        self.queue.put(req)
+        self._queue.append(req)
+
+    def has_queued(self) -> bool:
+        return bool(self._queue)
 
     def _finish(self, req: Request):
         self._completed.append(req)
 
+    def _place(self, slot_i: int, req: Request, first: int):
+        """Post-prefill bookkeeping shared by both prefill paths."""
+        req.out_tokens.append(first)
+        if req.max_new_tokens <= 1 or first == req.eos_id:
+            # finished at prefill (token budget of 1, or EOS on the first
+            # token): never occupies the slot — admission keeps going.
+            self._finish(req)
+            return
+        slot = self.slots[slot_i]
+        slot.req = req
+        slot.pos = len(req.prompt)   # prompt rows in cache; the first
+        slot.remaining = req.max_new_tokens - 1   # generated token is in
+        # flight and will be written at row `pos` by the next decode step
+
     def _admit(self, params):
-        for i, slot in enumerate(self.slots):
-            while slot.req is None:
-                try:
-                    req = self.queue.get_nowait()
-                except queue.Empty:
-                    return
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                t0 = time.perf_counter()
-                with self._gemm_scope():
-                    self.cache, logits = self._prefill_one(
-                        params, toks, self.cache, i)
-                first = int(np.argmax(jax.device_get(logits[0])))
-                self.stats["prefill_s"] += time.perf_counter() - t0
-                self.stats["prefill_tokens"] += len(req.prompt)
-                req.out_tokens.append(first)
-                if req.max_new_tokens <= 1 or first == req.eos_id:
-                    # finished at prefill (token budget of 1, or EOS on the
-                    # first token): never occupies the slot — keep admitting.
-                    self._finish(req)
-                    continue
-                slot.req = req
-                slot.pos = len(req.prompt)   # prompt rows in cache; the first
-                slot.remaining = req.max_new_tokens - 1   # generated token is
-                # in flight and will be written at row `pos` by the next step
+        while self._queue:
+            free = [i for i, s in enumerate(self.slots) if s.req is None]
+            if not free:
+                return
+            if self._bucketed:
+                self._admit_bucket(params, free)
+            else:
+                self._admit_one(params, free[0])
+
+    def _admit_bucket(self, params, free: List[int]):
+        """One batched prefill dispatch: the head-of-queue request's bucket,
+        plus every queued request (FIFO) sharing that bucket, up to the free
+        slot count. Other buckets stay queued in order for the next round.
+
+        The dispatch always runs the forward over all B slot rows (masked-out
+        rows are discarded), trading up to B× redundant prefill FLOPs on a
+        single-request admission for a jit cache keyed ONLY by bucket length
+        — O(log max_len) compiles total instead of O(buckets × batch sizes).
+        Under load the dispatch carries several requests and the waste
+        amortizes away; latency-sensitive single-stream serving can set
+        ``prefill_buckets=False`` to get the batch-1 fallback."""
+        bucket = self._bucket_len(len(self._queue[0].prompt))
+        batch: List[Request] = []
+        kept: List[Request] = []
+        while self._queue and len(batch) < len(free):
+            r = self._queue.popleft()
+            if self._bucket_len(len(r.prompt)) == bucket:
+                batch.append(r)
+            else:
+                kept.append(r)
+        self._queue.extendleft(reversed(kept))
+
+        tokens = np.zeros((self.b, bucket), np.int32)
+        lengths = np.ones((self.b,), np.int32)
+        mask = np.zeros((self.b,), bool)
+        for slot_i, req in zip(free, batch):
+            n = len(req.prompt)
+            tokens[slot_i, :n] = req.prompt
+            lengths[slot_i] = n
+            mask[slot_i] = True
+            self.stats["prefill_tokens"] += n
+        t0 = time.perf_counter()
+        with self._gemm_scope():
+            self.cache, first = self._prefill_bucket(
+                params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(lengths), jnp.asarray(mask))
+        first_h = np.asarray(jax.device_get(first))     # (B,) int32
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_dispatches"] += 1
+        self.stats["host_bytes_prefill"] += int(first_h.nbytes)
+        for slot_i, req in zip(free, batch):
+            self._place(slot_i, req, int(first_h[slot_i]))
+
+    def _admit_one(self, params, slot_i: int):
+        req = self._queue.popleft()
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        t0 = time.perf_counter()
+        with self._gemm_scope():
+            self.cache, first = self._prefill_one(params, toks, self.cache,
+                                                  slot_i)
+        first_h = int(jax.device_get(first))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += len(req.prompt)
+        self.stats["prefill_dispatches"] += 1
+        self.stats["host_bytes_prefill"] += 4
+        self._place(slot_i, req, first_h)
 
     # -- decode ------------------------------------------------------------
     def step(self, params) -> int:
-        """One lockstep decode over all active slots; returns #active."""
+        """One fused decode dispatch (``decode_chunk`` lockstep steps) over
+        all active slots; returns #active at dispatch time."""
         params = self._params_for(params)
         self._admit(params)
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
         if not active:
             return 0
-        last = np.zeros((self.b, 1), np.int32)
+        last = np.zeros((self.b,), np.int32)
         pos = np.zeros((self.b,), np.int32)
-        for i in active:
-            last[i, 0] = self.slots[i].req.out_tokens[-1]
-            pos[i] = self.slots[i].pos
-        # per-slot position vector: slot i writes KV at row pos[i] and masks
-        # rows >= pos[i] + 1; inactive slots decode garbage at row 0, which
-        # the next prefill into that slot overwrites before it is ever read.
-        t0 = time.perf_counter()
-        with self._gemm_scope():
-            self.cache, logits = self._decode(
-                params, jnp.asarray(last), self.cache,
-                jnp.asarray(pos, jnp.int32))
-        logits_h = jax.device_get(logits)
-        self.stats["decode_s"] += time.perf_counter() - t0
-        self.stats["decode_tokens"] += len(active)
-        self.stats["steps"] += 1
+        live = np.zeros((self.b,), bool)
+        rem = np.zeros((self.b,), np.int32)
+        eos = np.full((self.b,), -1, np.int32)
         for i in active:
             slot = self.slots[i]
-            nxt = int(np.argmax(logits_h[i]))
-            slot.req.out_tokens.append(nxt)
-            slot.pos += 1
-            slot.remaining -= 1
-            if slot.remaining <= 0 or nxt == slot.req.eos_id:
-                self._finish(slot.req)
-                slot.req = None   # slot freed -> next _admit refills it
+            last[i] = slot.req.out_tokens[-1]
+            pos[i] = slot.pos
+            live[i] = True
+            rem[i] = slot.remaining
+            eos[i] = slot.req.eos_id
+        # per-slot position vector: slot i writes KV at row pos[i] and masks
+        # rows >= pos[i] + 1; inactive/frozen slots re-write their own row
+        # with unchanged values, so the cache stays bit-identical to
+        # sequential decode across the whole chunk.
+        t0 = time.perf_counter()
+        with self._gemm_scope():
+            self.cache, toks = self._decode(
+                params, jnp.asarray(last), self.cache,
+                jnp.asarray(pos), jnp.asarray(live), jnp.asarray(rem),
+                jnp.asarray(eos))
+        toks_h = np.asarray(jax.device_get(toks))       # (chunk, B) int32
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_dispatches"] += 1
+        self.stats["host_bytes_decode"] += int(toks_h.nbytes)
+        # replay the device's (eos, remaining) bookkeeping on the host to
+        # recover which of the chunk tokens were actually emitted per slot.
+        for j in range(toks_h.shape[0]):
+            emitted = 0
+            for i in active:
+                slot = self.slots[i]
+                if slot.req is None:
+                    continue
+                nxt = int(toks_h[j, i])
+                slot.req.out_tokens.append(nxt)
+                slot.pos += 1
+                slot.remaining -= 1
+                emitted += 1
+                if slot.remaining <= 0 or nxt == slot.req.eos_id:
+                    self._finish(slot.req)
+                    slot.req = None   # freed -> next _admit refills it
+            if emitted:
+                self.stats["steps"] += 1
+                self.stats["decode_tokens"] += emitted
         return len(active)
 
     def run_until_drained(self, params, *, max_steps: int = 10_000,
@@ -204,11 +362,11 @@ class BatchServer:
         """Step until the queue and all slots drain. Returns the finished
         requests in COMPLETION order — including requests admitted and
         completed within a single step (e.g. max_new_tokens=1). ``stats``
-        describe this run only (reset here alongside the completion list)."""
+        describe this run only (reset here alongside the completion list);
+        ``compiles`` is server-lifetime and is NOT reset."""
         self._completed = []
-        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
-                      "prefill_tokens": 0, "decode_tokens": 0}
+        self.stats = self._fresh_stats()
         for _ in range(max_steps):
-            if self.step(params) == 0 and self.queue.empty():
+            if self.step(params) == 0 and not self._queue:
                 break
         return self._completed

@@ -82,6 +82,27 @@ def test_ffip_y_operand_never_materializes_b():
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
 
 
+def test_ffip_y_memoized_per_weight(monkeypatch):
+    """The paper deploys y as an OFFLINE weight transform (§4.4): repeated
+    eager ffip_gemm calls against the same weight array derive y once, and a
+    precomputed y can be passed in so make_y is never called at all."""
+    from repro.kernels import ffip_gemm as FG
+    a, b = make_inputs(16, 8, 8, jnp.int8, seed=8)
+    a32, b32 = a.astype(jnp.int32), b.astype(jnp.int32)
+    calls = []
+    orig = fip.make_y
+    monkeypatch.setattr(FG.fip, "make_y", lambda x: calls.append(1) or orig(x))
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    for _ in range(3):
+        got = FG.ffip_gemm(a32, b32, bm=8, bn=8, bk=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+    assert len(calls) == 1, "make_y recomputed for a cached weight"
+    got = FG.ffip_gemm(a32, b32, y=orig(b32), bm=8, bn=8, bk=8,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+    assert len(calls) == 1
+
+
 def test_fold_beta_kernel_plus_bias():
     """Kernel with fold_beta=True + Eq.(15) bias == full product."""
     a, b = make_inputs(16, 8, 8, jnp.int8, seed=6)

@@ -1,0 +1,155 @@
+"""Serving hot-path overhaul: fused multi-step decode equivalence, bucketed
+prefill equivalence, compile-count bounds, and on-device sampling transfer
+sizes.
+
+The load-bearing claim: ``decode_chunk > 1`` (one lax.scan dispatch per chunk
+of steps, sampled tokens fed back on device) and bucketed batched prefill
+change WHAT crosses the host boundary and HOW OFTEN — never the tokens. Every
+test here compares against the chunk=1 path, which test_serve_batcher.py in
+turn pins to one-at-a-time sequential generation."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serve.batcher import BatchServer, Request
+
+MAX_LEN = 48
+
+
+def _setup(arch, seed=0):
+    cfg = configs.smoke_config(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(l,)) for l in lens]
+
+
+def _run(model, params, prompts, budgets, *, slots, decode_chunk,
+         eos_id=-1, quantized=False, prefill_buckets=True):
+    srv = BatchServer(model, batch_slots=slots, max_len=MAX_LEN,
+                      quantized=quantized, decode_chunk=decode_chunk,
+                      prefill_buckets=prefill_buckets)
+    for i, p in enumerate(prompts):
+        mx = budgets[i] if isinstance(budgets, (list, tuple)) else budgets
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=mx, eos_id=eos_id))
+    done = srv.run_until_drained(params)
+    return done, srv
+
+
+@pytest.mark.parametrize("quantized", [False, True],
+                         ids=["float", "int8-ffip"])
+@pytest.mark.parametrize("arch", ["minicpm-2b", "deepseek-v2-lite-16b"])
+def test_fused_decode_chunk_equivalence(arch, quantized):
+    """decode_chunk ∈ {1, 4} produce identical out_tokens and completion sets
+    under mixed lengths, slot churn (5 requests / 2 slots), budgets not
+    divisible by the chunk, and a budget-1 request that finishes at prefill —
+    for the float AND the quantized int8 FFIP path, GQA and absorbed-MLA."""
+    cfg, model, params = _setup(arch)
+    lens = [3, 6, 9, 4, 7]
+    budgets = [5, 1, 3, 6, 2]      # 5 and 6 straddle chunk=4 boundaries
+    prompts = _prompts(cfg, lens, seed=7)
+    done1, _ = _run(model, params, prompts, budgets, slots=2, decode_chunk=1,
+                    quantized=quantized)
+    done4, _ = _run(model, params, prompts, budgets, slots=2, decode_chunk=4,
+                    quantized=quantized)
+    assert sorted(r.rid for r in done1) == list(range(len(prompts)))
+    assert sorted(r.rid for r in done4) == list(range(len(prompts)))
+    got1 = {r.rid: r.out_tokens for r in done1}
+    got4 = {r.rid: r.out_tokens for r in done4}
+    for i in range(len(prompts)):
+        assert len(got1[i]) == budgets[i], (arch, i, got1[i])
+        assert got1[i] == got4[i], (arch, quantized, i, got1[i], got4[i])
+
+
+def test_fused_decode_mid_chunk_eos():
+    """A slot hitting EOS mid-chunk freezes on device: the trailing scan steps
+    re-write its row with unchanged values, the host drops the post-EOS
+    tokens, and the emitted stream matches chunk=1 exactly."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [4, 6, 5], seed=3)
+    free, _ = _run(model, params, prompts, 6, slots=3, decode_chunk=1)
+    ref = {r.rid: list(r.out_tokens) for r in free}
+    # an EOS that lands mid-stream (2nd token of rid 0) => mid-chunk for
+    # chunk=4 (prefill emits token 1, the chunk then emits tokens 2..5)
+    eos = ref[0][1]
+    done1, _ = _run(model, params, prompts, 6, slots=3, decode_chunk=1,
+                    eos_id=eos)
+    done4, _ = _run(model, params, prompts, 6, slots=3, decode_chunk=4,
+                    eos_id=eos)
+    got1 = {r.rid: r.out_tokens for r in done1}
+    got4 = {r.rid: r.out_tokens for r in done4}
+    assert got1 == got4
+    for rid, toks in got1.items():
+        full = ref[rid]
+        want = full[:full.index(eos) + 1] if eos in full else full
+        assert toks == want, (rid, toks, want)
+
+
+def test_bucketed_prefill_matches_per_slot_fallback():
+    """Bucketed batched prefill (padded prompts, masked write into the shared
+    cache) produces the same tokens as the per-slot scatter fallback."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [3, 8, 5, 6, 12], seed=5)
+    fast, _ = _run(model, params, prompts, 4, slots=3, decode_chunk=2,
+                   prefill_buckets=True)
+    slow, srv_slow = _run(model, params, prompts, 4, slots=3, decode_chunk=2,
+                          prefill_buckets=False)
+    assert not srv_slow._bucketed
+    got_f = {r.rid: r.out_tokens for r in fast}
+    got_s = {r.rid: r.out_tokens for r in slow}
+    assert got_f == got_s
+
+
+def test_compile_counts_bounded_by_buckets():
+    """A mixed-length workload spanning >= 3 power-of-2 buckets compiles the
+    prefill at most once per bucket (not once per distinct prompt length) and
+    the decode program exactly once — the jit cache is O(log max_len)."""
+    cfg, model, params = _setup("minicpm-2b")
+    lens = [3, 4, 6, 7, 11, 14, 5, 9]            # buckets {4, 8, 16} only
+    buckets = {max(4, 1 << (int(l) - 1).bit_length()) for l in lens}
+    assert len(buckets) == 3
+    prompts = _prompts(cfg, lens, seed=11)
+    done, srv = _run(model, params, prompts, 3, slots=3, decode_chunk=4)
+    assert sorted(r.rid for r in done) == list(range(len(lens)))
+    assert srv.compiles["decode"] == 1, srv.compiles
+    assert srv.compiles["prefill"] <= len(buckets), (srv.compiles, buckets)
+    # and the cache stays warm: a second drain re-traces nothing
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=100 + i, prompt=p, max_new_tokens=3))
+    srv.run_until_drained(params)
+    assert srv.compiles["prefill"] <= len(buckets)
+    assert srv.compiles["decode"] == 1
+
+
+def test_on_device_sampling_host_bytes():
+    """Only int32 token ids cross per decode dispatch: chunk*B*4 bytes, vs the
+    PR 2 hot path's B*V*4-byte logits transfer per step."""
+    cfg, model, params = _setup("minicpm-2b")
+    prompts = _prompts(cfg, [4, 6], seed=2)
+    done, srv = _run(model, params, prompts, 4, slots=2, decode_chunk=4)
+    st = srv.stats
+    assert st["host_bytes_decode"] == st["decode_dispatches"] * 4 * srv.b * 4
+    assert st["host_bytes_decode"] < srv.b * cfg.vocab * 4  # < ONE logit xfer
+    assert st["host_bytes_prefill"] == st["prefill_dispatches"] * srv.b * 4
+
+
+def test_sample_step_matches_decode_step_argmax():
+    """Model.sample_step is decode_step + fused argmax (the (B, V) logits
+    never leave the device on the serving path)."""
+    cfg, model, params = _setup("minicpm-2b")
+    cache = model.init_cache(2, 16)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, size=(2, 5))
+    cache, _ = model.prefill(params, toks, cache)
+    pos = np.array([5, 5], np.int32)
+    step_tok = np.array([[1], [2]], np.int32)
+    _, logits = model.decode_step(params, step_tok, cache, pos)
+    _, ids = model.sample_step(params, step_tok, cache, pos)
+    np.testing.assert_array_equal(np.argmax(np.asarray(logits), -1),
+                                  np.asarray(ids))

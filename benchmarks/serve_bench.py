@@ -63,12 +63,13 @@ def _requests(cfg, requests: int, max_new: int, seed: int):
 
 def bench(arch: str, *, slots: int, requests: int, max_new: int,
           max_len: int, quantized: bool, decode_chunk: int,
-          seed: int = 0) -> dict:
+          gemm_impl=None, gemm_block=None, seed: int = 0) -> dict:
     cfg = configs.smoke_config(configs.get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     srv = BatchServer(model, batch_slots=slots, max_len=max_len,
-                      quantized=quantized, decode_chunk=decode_chunk)
+                      quantized=quantized, decode_chunk=decode_chunk,
+                      gemm_impl=gemm_impl, gemm_block=gemm_block)
 
     # --- warmup (untimed region): compile every prompt bucket + the decode
     # program, using the same length distribution as the measured workload.
@@ -96,6 +97,9 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
     return {
         "arch": cfg.name,
         "mode": "int8-ffip" if quantized else "float",
+        "gemm": {"impl": gemm_impl or "xla",
+                 "block": list(gemm_block) if isinstance(gemm_block, tuple)
+                 else gemm_block},
         "slots": slots,
         "requests": requests,
         "decode_chunk": decode_chunk,
@@ -134,7 +138,15 @@ def main():
     ap.add_argument("--chunks", type=int, nargs="+", default=[1, 2, 4, 8],
                     help="decode_chunk sweep (quantized mode, being ~5x "
                          "slower, runs only the first value and 4, deduped)")
+    ap.add_argument("--gemm-impl", choices=["xla", "pallas"], default=None,
+                    help="GEMM provider for the serving forward")
+    ap.add_argument("--gemm-block", default=None,
+                    help="'auto' = repro.tune schedule cache (tunes flash "
+                         "attention blocks too) or explicit 'bm,bn,bk' (needs --gemm-impl pallas)")
     args = ap.parse_args()
+    gemm_block = args.gemm_block
+    if gemm_block and gemm_block != "auto":
+        gemm_block = tuple(int(x) for x in gemm_block.split(","))
 
     results = []
     for quantized in (False, True):
@@ -143,7 +155,8 @@ def main():
             results.append(bench(
                 args.arch, slots=args.slots, requests=args.requests,
                 max_new=args.max_new, max_len=args.max_len,
-                quantized=quantized, decode_chunk=chunk))
+                quantized=quantized, decode_chunk=chunk,
+                gemm_impl=args.gemm_impl, gemm_block=gemm_block))
 
     def _best(mode):
         return max((r for r in results if r["mode"] == mode),

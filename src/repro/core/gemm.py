@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
-from typing import Literal, Optional
+from typing import Literal, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,14 @@ from repro.core import fip
 Array = jax.Array
 Algo = Literal["baseline", "fip", "ffip"]
 Impl = Literal["xla", "ref", "pallas"]
+# Block-size policy for the pallas kernels (and flash attention, which reads
+# the ambient config in models/attention.py):
+#   None          -> the kernels' static defaults (ops.choose_blocks)
+#   "auto"        -> tuned schedule from the repro.tune persistent cache,
+#                    falling back to the defaults on a miss (counted + logged
+#                    once per key — never a silent constant)
+#   (bm, bn, bk)  -> explicit override
+Block = Union[None, str, Tuple[int, int, int]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,12 +43,15 @@ class GemmConfig:
     algo: Algo = "baseline"
     impl: Impl = "xla"
     k_chunk: int = 0           # chunking for ref fip/ffip cross-term
-    interpret: bool = True     # pallas interpret mode (CPU container)
+    # pallas interpret mode: None = backend auto (compiled on TPU, interpret
+    # on CPU/GPU hosts — kernels/compat.py); bools force either way.
+    interpret: Optional[bool] = None
     # int8 inference mode (§3.3/§4.4): dense layers whose params carry an
     # offline-prepared "q" entry (core.quant.attach_quantized_weights) run the
     # integer (F)FIP path with Eq. 15 folded beta + the Eq. 20 zero-point
     # adjuster; layers without one fall back to the float `algo` path.
     quantized: bool = False
+    block: Block = None
 
 
 _state = threading.local()
@@ -70,19 +82,47 @@ def _pad_even_k(a: Array, b: Array):
     return jnp.pad(a, pad_a), jnp.pad(b, ((0, 1), (0, 0)))
 
 
+def resolve_blocks(cfg: GemmConfig, algo: str, a: Array, b: Array,
+                   ) -> Tuple[int, int, int]:
+    """Trace-time block resolution for the pallas providers. (0, 0, 0) means
+    "use the kernel's static default" (ops.choose_blocks); ``block="auto"``
+    consults the repro.tune schedule cache for this (algo, dtype,
+    shape-bucket, device) — a pure lookup, never a measurement — and falls
+    back to the default on a miss (tune.stats counts it)."""
+    if cfg.block is None:
+        return (0, 0, 0)
+    if isinstance(cfg.block, (tuple, list)):
+        bm, bn, bk = cfg.block
+        return (int(bm), int(bn), int(bk))
+    if cfg.block == "auto":
+        from repro import tune
+        m = math.prod(a.shape[:-1])
+        got = tune.lookup_gemm_blocks(
+            algo, jnp.result_type(a.dtype, b.dtype),
+            m, b.shape[-1], a.shape[-1])
+        return got if got is not None else (0, 0, 0)
+    raise ValueError(
+        f"GemmConfig.block must be None, 'auto' or (bm, bn, bk); "
+        f"got {cfg.block!r}")
+
+
 def gemm(a: Array, b: Array, cfg: Optional[GemmConfig] = None) -> Array:
     """C = A @ B through the configured provider. a: (..., M, K), b: (K, N)."""
     cfg = cfg or current_config()
     if cfg.algo == "baseline":
         if cfg.impl == "pallas":
             from repro.kernels import ops as kops
-            return kops.matmul(a, b, algo="baseline", interpret=cfg.interpret)
+            bm, bn, bk = resolve_blocks(cfg, "baseline", a, b)
+            return kops.matmul(a, b, algo="baseline", interpret=cfg.interpret,
+                               bm=bm, bn=bn, bk=bk)
         return jnp.matmul(a, b)
 
     a, b = _pad_even_k(a, b)
     if cfg.impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.matmul(a, b, algo=cfg.algo, interpret=cfg.interpret)
+        bm, bn, bk = resolve_blocks(cfg, cfg.algo, a, b)
+        return kops.matmul(a, b, algo=cfg.algo, interpret=cfg.interpret,
+                           bm=bm, bn=bn, bk=bk)
     # 'xla' and 'ref' for fip/ffip both lower the exact algebra through XLA;
     # trainable wrappers give analytic (baseline) gradients.
     fn = (fip.fip_matmul_trainable if cfg.algo == "fip"

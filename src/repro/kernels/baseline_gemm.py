@@ -13,9 +13,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 Array = jax.Array
+
+
+def pad_to_blocks(a: Array, b: Array, bm: int, bn: int, bk: int):
+    """Zero-pad (M, K) x (K, N) operands to block multiples. Shared by every
+    GEMM kernel's pad-run-slice fallback: zero rows/columns contribute zero to
+    baseline products AND to the FIP-family cross/alpha/beta terms (pairs of
+    zeros pre-add to zero), so padding is exact — the caller slices the
+    (m, n) corner back out. Keeps the tuner free to consider any legal block
+    on any shape, and odd model dims out of the assert graveyard."""
+    m, k = a.shape
+    n = b.shape[1]
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    return a, b
 
 
 def _kernel(a_ref, b_ref, o_ref, *, acc_dtype):
@@ -39,18 +56,24 @@ def _kernel(a_ref, b_ref, o_ref, *, acc_dtype):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def baseline_gemm(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
-                  bk: int = 128, interpret: bool = True) -> Array:
+                  bk: int = 128, interpret=None) -> Array:
     """a: (M, K), b: (K, N) -> (M, N) in the accumulation dtype.
 
-    M, N, K must be multiples of the block sizes (ops.py pads).
+    Shapes not divisible by the blocks are zero-padded and the result sliced
+    (exact). ``interpret=None`` auto-detects: compiled on TPU, interpret mode
+    elsewhere (kernels/compat.py); pass a bool to override.
     """
+    interpret = resolve_interpret(interpret)
+    m0, k0 = a.shape
+    k2, n0 = b.shape
+    assert k0 == k2
+    a, b = pad_to_blocks(a, b, bm, bn, bk)
     m, k = a.shape
-    k2, n = b.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    n = b.shape[1]
     acc_dtype = (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
                  else jnp.float32)
     grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[
@@ -63,3 +86,4 @@ def baseline_gemm(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)
+    return out[:m0, :n0]

@@ -1,4 +1,4 @@
-"""Compat layer over Pallas TPU API drift.
+"""Compat layer over Pallas TPU API drift + backend probes.
 
 `pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` across JAX
 releases; the installed toolchain may carry either name. Every kernel builds
@@ -6,9 +6,19 @@ its compiler params through :func:`tpu_compiler_params` so one probe point
 absorbs the drift (tests/test_kernels.py exercises all kernels in interpret
 mode at collection-adjacent cost precisely so this breaks loudly, not deep in
 a smoke test).
+
+This module is also the single place kernels ask "should Pallas run compiled
+or interpreted?": every kernel entry point takes ``interpret=None`` meaning
+"auto" and resolves it through :func:`resolve_interpret` — compiled on a TPU
+backend, interpret-mode emulation everywhere else (the CPU CI container). An
+explicit ``True``/``False`` always wins, so tests can force interpret mode on
+any backend and a TPU user can force interpretation for debugging.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 _PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
@@ -26,3 +36,24 @@ def tpu_compiler_params(**kwargs):
     if _PARAMS_CLS is None:
         return None
     return _PARAMS_CLS(**kwargs)
+
+
+def is_tpu_backend() -> bool:
+    """True when jax's default backend is a real TPU (not forced-host CPU)."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpret elsewhere."""
+    return not is_tpu_backend()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel's ``interpret`` kwarg: ``None`` = backend auto-detect
+    (compiled on TPU, interpret on CPU/GPU hosts), an explicit bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def device_kind() -> str:
+    """Schedule-cache device key: e.g. ``cpu``, ``TPU_v5e`` (spaces -> _)."""
+    return jax.devices()[0].device_kind.replace(" ", "_")

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.baseline_gemm import pad_to_blocks
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 from repro.core import fip
 
@@ -87,17 +88,27 @@ def _kernel(a_ref, y_ref, o_ref, carry_ref, *, acc_dtype, fold_beta):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
                                              "fold_beta"))
 def ffip_gemm_y(a: Array, y: Array, *, bm: int = 128, bn: int = 128,
-                bk: int = 64, interpret: bool = True,
+                bk: int = 64, interpret=None,
                 fold_beta: bool = False) -> Array:
-    """FFIP GEMM from precomputed y deltas. a: (M, K), y: (K, N) -> (M, N)."""
+    """FFIP GEMM from precomputed y deltas. a: (M, K), y: (K, N) -> (M, N).
+
+    Non-divisible shapes zero-pad and slice (exact for the returned corner:
+    zero y rows reconstruct zero b rows against zero a columns, and padded N
+    columns live at the tail of the final carry sweep so no real column reads
+    their prefix). bk must be even; ``interpret=None`` = backend auto."""
+    interpret = resolve_interpret(interpret)
+    assert bk % 2 == 0
+    m0, k0 = a.shape
+    k2, n0 = y.shape
+    assert k0 == k2
+    a, y = pad_to_blocks(a, y, bm, bn, bk)
     m, k = a.shape
-    k2, n = y.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 2 == 0
+    n = y.shape[1]
     acc_dtype = (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
                  else jnp.float32)
     # grid: N innermost so the carry sweeps columns for a fixed (m, k) stripe.
     grid = (m // bm, k // bk, n // bn)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, acc_dtype=acc_dtype, fold_beta=fold_beta),
         grid=grid,
         in_specs=[
@@ -111,6 +122,7 @@ def ffip_gemm_y(a: Array, y: Array, *, bm: int = 128, bn: int = 128,
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, y)
+    return out[:m0, :n0]
 
 
 def ffip_gemm(a: Array, b: Array, *, y: Array = None, **kw) -> Array:

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.baseline_gemm import pad_to_blocks
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 Array = jax.Array
 
@@ -52,18 +53,25 @@ def _kernel(a_ref, b_ref, o_ref, *, acc_dtype, fold_beta):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
                                              "fold_beta"))
 def fip_gemm(a: Array, b: Array, *, bm: int = 128, bn: int = 128, bk: int = 64,
-             interpret: bool = True, fold_beta: bool = False) -> Array:
-    """a: (M, K), b: (K, N) -> (M, N) via Eq. (2). Blocks must divide shapes;
-    bk must be even (pairs). With ``fold_beta=True`` the caller is expected to
-    add ``fold_beta_into_bias(b)`` (Eq. 15) afterwards — the hardware's
-    free beta handling."""
+             interpret=None, fold_beta: bool = False) -> Array:
+    """a: (M, K), b: (K, N) -> (M, N) via Eq. (2). bk must be even (pairs);
+    shapes not divisible by the blocks are zero-padded and the result sliced
+    (zero pairs pre-add to zero, so cross/alpha/beta are unchanged — exact).
+    With ``fold_beta=True`` the caller is expected to add
+    ``fold_beta_into_bias(b)`` (Eq. 15) afterwards — the hardware's free beta
+    handling. ``interpret=None`` auto-detects the backend (compat.py)."""
+    interpret = resolve_interpret(interpret)
+    assert bk % 2 == 0
+    m0, k0 = a.shape
+    k2, n0 = b.shape
+    assert k0 == k2
+    a, b = pad_to_blocks(a, b, bm, bn, bk)
     m, k = a.shape
-    k2, n = b.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 2 == 0
+    n = b.shape[1]
     acc_dtype = (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
                  else jnp.float32)
     grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, acc_dtype=acc_dtype, fold_beta=fold_beta),
         grid=grid,
         in_specs=[
@@ -76,3 +84,4 @@ def fip_gemm(a: Array, b: Array, *, bm: int = 128, bn: int = 128, bk: int = 64,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)
+    return out[:m0, :n0]

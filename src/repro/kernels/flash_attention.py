@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -74,9 +74,10 @@ def _fwd_kernel(w_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def _flash_fwd(q, k, v, window, *, causal=True, bq=128, bk=128,
-               interpret=True) -> Tuple[Array, Array]:
+               interpret=None) -> Tuple[Array, Array]:
     """q: (BH, Sq, d), k/v: (BH, Sk, d), window: () int32 (traced OK, <=0 =
     full) -> (out (BH,Sq,d), lse (BH,Sq))."""
+    interpret = resolve_interpret(interpret)
     window = jnp.asarray(window, jnp.int32).reshape(1, 1)
     bh, sq, d = q.shape
     _, sk, _ = k.shape
@@ -183,7 +184,8 @@ def _bwd_kernel(w_ref, q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref, dq_ref,
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def _flash_bwd(q, k, v, o, lse, do, window, *, causal=True, bq=128, bk=128,
-               interpret=True):
+               interpret=None):
+    interpret = resolve_interpret(interpret)
     window = jnp.asarray(window, jnp.int32).reshape(1, 1)
     bh, sq, d = q.shape
     _, sk, _ = k.shape
@@ -237,27 +239,33 @@ def _flash_bwd(q, k, v, o, lse, do, window, *, causal=True, bq=128, bk=128,
     return dq[:, :sq], dk[:, :sk], dv[:, :sk]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def flash_attention(q: Array, k: Array, v: Array, window=0,
-                    causal: bool = True, interpret: bool = True) -> Array:
+                    causal: bool = True, interpret=None,
+                    bq: int = 128, bk: int = 128) -> Array:
     """q: (BH, Sq, d), k/v: (BH, Sk, d) -> (BH, Sq, d).
 
     ``window`` may be a TRACED int32 scalar (<=0 = full attention) — gemma3's
-    per-layer local/global pattern rides through the layer scan this way."""
-    out, _ = _flash_fwd(q, k, v, window, causal=causal, interpret=interpret)
+    per-layer local/global pattern rides through the layer scan this way.
+    ``interpret=None`` auto-detects the backend (compat.py); ``bq``/``bk``
+    are the q/k sequence block sizes — the attention layer resolves tuned
+    values through ``repro.tune`` under ``GemmConfig(block="auto")``."""
+    out, _ = _flash_fwd(q, k, v, window, causal=causal, interpret=interpret,
+                        bq=bq, bk=bk)
     return out
 
 
-def _fa_fwd(q, k, v, window, causal, interpret):
-    out, lse = _flash_fwd(q, k, v, window, causal=causal, interpret=interpret)
+def _fa_fwd(q, k, v, window, causal, interpret, bq, bk):
+    out, lse = _flash_fwd(q, k, v, window, causal=causal, interpret=interpret,
+                          bq=bq, bk=bk)
     return out, (q, k, v, out, lse, window)
 
 
-def _fa_bwd(causal, interpret, res, do):
+def _fa_bwd(causal, interpret, bq, bk, res, do):
     import numpy as _np
     q, k, v, out, lse, window = res
     dq, dk, dv = _flash_bwd(q, k, v, out, lse, do, window, causal=causal,
-                            interpret=interpret)
+                            bq=bq, bk=bk, interpret=interpret)
     dw = _np.zeros((), jax.dtypes.float0)   # int operand: symbolic zero grad
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dw
 

@@ -1,9 +1,12 @@
 """Public jit'd wrappers over the Pallas GEMM kernels.
 
-Handles: leading batch dims, padding M/N/K to block multiples (K padding is
-exact for FIP/FFIP — zero rows of A and B contribute zero to cross/α/β),
-dtype policy (int8→int32 accumulation, bf16→f32), block-size autotuning for
-VMEM fit, and output slicing/casting.
+Handles: leading batch dims, dtype policy (int8→int32 accumulation,
+bf16→f32), default block selection for VMEM fit (:func:`choose_blocks`),
+and output casting. Padding to block multiples lives in the kernels
+themselves (``baseline_gemm.pad_to_blocks`` — zero rows/cols are exact for
+the baseline products and the FIP/FFIP cross/α/β algebra), so any caller —
+this wrapper, the repro.tune measurement harness, or a direct kernel user —
+gets the same pad-run-slice fallback.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import jax.numpy as jnp
 from repro.kernels.baseline_gemm import baseline_gemm
 # Public surface for the Pallas API-drift shim (kernel modules import it from
 # repro.kernels.compat to avoid a circular import with this module).
-from repro.kernels.compat import tpu_compiler_params  # noqa: F401
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params  # noqa: F401
 from repro.kernels.fip_gemm import fip_gemm
 from repro.kernels.ffip_gemm import ffip_gemm
 
@@ -50,24 +53,18 @@ def _round_up_pow2(x: int) -> int:
     return p
 
 
-def _pad_to(x: Array, axis: int, mult: int) -> Array:
-    size = x.shape[axis]
-    rem = (-size) % mult
-    if rem == 0:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, rem)
-    return jnp.pad(x, pads)
-
-
 @functools.partial(jax.jit, static_argnames=("algo", "interpret", "bm", "bn", "bk"))
-def matmul(a: Array, b: Array, *, algo: str = "ffip", interpret: bool = True,
+def matmul(a: Array, b: Array, *, algo: str = "ffip", interpret=None,
            bm: int = 0, bn: int = 0, bk: int = 0) -> Array:
     """C = A @ B via the Pallas kernels. a: (..., M, K), b: (K, N).
 
     Returns the result cast back to the promoted input dtype for floats and
     int32 for integer inputs (hardware-accumulator semantics).
+    ``interpret=None`` auto-detects the backend (kernels/compat.py); pass
+    ``bm``/``bn``/``bk`` (e.g. from a ``repro.tune`` schedule) to override the
+    static default blocks.
     """
+    interpret = resolve_interpret(interpret)
     *batch, m, k = a.shape
     k2, n = b.shape
     if k != k2:
@@ -78,19 +75,16 @@ def matmul(a: Array, b: Array, *, algo: str = "ffip", interpret: bool = True,
     if not (bm and bn and bk):
         bm, bn, bk = choose_blocks(mm, n, k, algo)
 
-    a2 = _pad_to(_pad_to(a2, 0, bm), 1, bk)
-    b2 = _pad_to(_pad_to(b, 0, bk), 1, bn)
-
+    # non-divisible shapes are padded/sliced inside the kernels (exactly)
     if algo == "baseline":
-        out = baseline_gemm(a2, b2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+        out = baseline_gemm(a2, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
     elif algo == "fip":
-        out = fip_gemm(a2, b2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+        out = fip_gemm(a2, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
     elif algo == "ffip":
-        out = ffip_gemm(a2, b2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+        out = ffip_gemm(a2, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
     else:
         raise ValueError(algo)
 
-    out = out[:mm, :n]
     if batch:
         out = out.reshape(*batch, m, n)
     if jnp.issubdtype(a.dtype, jnp.integer):

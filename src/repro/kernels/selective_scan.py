@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 Array = jax.Array
 
@@ -71,12 +71,14 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hout_ref,
 @functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
 def selective_scan(x: Array, dt: Array, b: Array, c: Array, a: Array,
                    h0: Array, *, chunk: int = 128, bd: int = 512,
-                   interpret: bool = True) -> Tuple[Array, Array]:
+                   interpret=None) -> Tuple[Array, Array]:
     """x, dt: (B, S, di); b, c: (B, S, N); a: (di, N); h0: (B, di, N).
 
     Returns (y (B,S,di), h_final (B,di,N), h_starts (B,S/chunk,di,N) —
     chunk-start state checkpoints consumed by the bwd kernel). S % chunk and
-    di % bd must hold (callers pad; config shapes already align)."""
+    di % bd must hold (callers pad; config shapes already align).
+    ``interpret=None`` = backend auto (compat.py)."""
+    interpret = resolve_interpret(interpret)
     bt, s, di = x.shape
     n = a.shape[-1]
     chunk = min(chunk, s)
@@ -192,9 +194,10 @@ def _bwd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, hstart_ref, dy_ref,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
 def selective_scan_bwd(x, dt, b, c, a, h_starts, dy, *, chunk=128, bd=512,
-                       interpret=True):
+                       interpret=None):
     """Adjoints (dx, ddt, db, dc, da) — exact; dh0 handled by the wrapper
     (training starts from h0 = 0)."""
+    interpret = resolve_interpret(interpret)
     bt, s, di = x.shape
     n = a.shape[-1]
     chunk = min(chunk, s)

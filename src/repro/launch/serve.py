@@ -7,9 +7,12 @@
 decode path (offline-quantized weights, Eq. 15 folded beta, Eq. 20 zero-point
 adjuster). ``--decode-chunk N`` fuses N decode steps into one dispatch
 (sampling stays on device either way); bucketed batched prefill is on by
-default (``--no-prefill-buckets`` forces the per-slot fallback). Exits
-non-zero if any request is dropped or over/under-generates, so this doubles
-as the CI batcher-regression smoke.
+default (``--no-prefill-buckets`` forces the per-slot fallback).
+``--gemm-impl pallas`` routes the serving projections through the Pallas
+kernels and ``--gemm-block auto`` resolves their block shapes (plus flash
+attention's) from the ``repro.tune`` schedule cache — pre-populate it with
+``python -m repro.launch.tune``. Exits non-zero if any request is dropped or
+over/under-generates, so this doubles as the CI batcher-regression smoke.
 """
 from __future__ import annotations
 
@@ -38,7 +41,16 @@ def main():
                     help="decode steps fused into one dispatch (lax.scan)")
     ap.add_argument("--no-prefill-buckets", action="store_true",
                     help="disable bucketed batched prefill (per-slot fallback)")
+    ap.add_argument("--gemm-impl", choices=["xla", "pallas"], default=None,
+                    help="GEMM provider for the serving forward "
+                         "(pallas = the paper's kernels)")
+    ap.add_argument("--gemm-block", default=None,
+                    help="'auto' (repro.tune schedule cache; also tunes flash "
+                         "attention blocks) or explicit 'bm,bn,bk' (needs --gemm-impl pallas)")
     args = ap.parse_args()
+    gemm_block = args.gemm_block
+    if gemm_block and gemm_block != "auto":
+        gemm_block = tuple(int(x) for x in gemm_block.split(","))
 
     cfg = configs.get_config(args.arch)
     if args.smoke:
@@ -47,6 +59,7 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     srv = BatchServer(model, batch_slots=args.slots, max_len=args.max_len,
                       quantized=args.quantized, decode_chunk=args.decode_chunk,
+                      gemm_impl=args.gemm_impl, gemm_block=gemm_block,
                       prefill_buckets=not args.no_prefill_buckets)
 
     rng = np.random.default_rng(0)
@@ -75,6 +88,11 @@ def main():
           f"host transfer {st['host_bytes_prefill'] + st['host_bytes_decode']}"
           f" B total "
           f"(sampling on device: ids only, never (B, V) logits)")
+    if args.gemm_block == "auto":
+        from repro import tune
+        print(f"  tune: {tune.stats['hits']} schedule hits / "
+              f"{tune.stats['misses']} misses (cache: "
+              f"{tune.get_cache().path})")
 
     # regression gates: nothing dropped, exact token budgets, valid ids
     assert len(done) == args.requests, "run_until_drained dropped requests"

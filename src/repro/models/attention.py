@@ -86,6 +86,24 @@ def _mask(q_pos: Array, k_pos: Array, window, causal: bool) -> Array:
     return jnp.where(window > 0, windowed, keep)
 
 
+def _flash_schedule(dtype, bh: int, sq: int, sk: int, d: int):
+    """Flash block sizes + interpret mode from the ambient GEMM config.
+
+    ``GemmConfig(block="auto")`` gives flash attention the same tuned-schedule
+    treatment as the GEMM kernels: a trace-time lookup in the repro.tune
+    cache for this shape bucket, defaults on a miss. ``interpret=None``
+    passes backend auto-detection down to the kernel."""
+    from repro.core.gemm import current_config
+    cfg = current_config()
+    bq, bk = 128, 128
+    if cfg.block == "auto":
+        from repro import tune
+        got = tune.lookup_flash_blocks(dtype, bh, sq, sk, d)
+        if got is not None:
+            bq, bk = got
+    return bq, bk, cfg.interpret
+
+
 def _flash_sdpa(q: Array, k: Array, v: Array, window, causal: bool) -> Array:
     """Pallas flash path for full/prefill self- and cross-attention.
 
@@ -103,10 +121,11 @@ def _flash_sdpa(q: Array, k: Array, v: Array, window, causal: bool) -> Array:
     kt = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], k.shape[-1])
     vt = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], v.shape[-1])
     w = window if window is not None else 0
+    bq, bk, interp = _flash_schedule(qt.dtype, b * h, sq, kt.shape[1], hd)
 
     mesh = dctx.get_mesh()
     if mesh is None:
-        out = flash_attention(qt, kt, vt, w, causal, True)
+        out = flash_attention(qt, kt, vt, w, causal, interp, bq, bk)
     else:
         # shard_map over the fused (B*H) dim: flash is embarrassingly parallel
         # there; each device runs the kernel on its local rows with ZERO
@@ -125,7 +144,8 @@ def _flash_sdpa(q: Array, k: Array, v: Array, window, causal: bool) -> Array:
                                                     or [1]))) == 0)
         sp = P(spec_axes if spec_axes else None, None, None)
         out = shard_map(
-            lambda q_, k_, v_, w_: flash_attention(q_, k_, v_, w_, causal, True),
+            lambda q_, k_, v_, w_: flash_attention(q_, k_, v_, w_, causal,
+                                                   interp, bq, bk),
             mesh=mesh, in_specs=(sp, sp, sp, P()), out_specs=sp,
             check_rep=False,
         )(qt, kt, vt, jnp.asarray(w, jnp.int32))

@@ -149,7 +149,7 @@ def _selective_scan_fused(xs, dt, bmat, cmat, A, h0, chunk, *,
             x_, dt_, b_, c_, a_, h_, ck, bd)
     else:
         call = lambda x_, dt_, b_, c_, a_, h_: ssk.selective_scan(
-            x_, dt_, b_, c_, a_, h_, chunk=ck, bd=bd, interpret=True)[:2]
+            x_, dt_, b_, c_, a_, h_, chunk=ck, bd=bd, interpret=None)[:2]
     if mesh is None:
         out = call(xs, dt, bmat, cmat, A, h0)
         return (out, None) if trainable else out

@@ -110,7 +110,8 @@ class BatchServer:
 
     def __init__(self, model: Model, *, batch_slots: int, max_len: int,
                  greedy: bool = True, quantized: bool = False,
-                 gemm_algo: str = "ffip", decode_chunk: int = 1,
+                 gemm_algo: str = "ffip", gemm_impl: Optional[str] = None,
+                 gemm_block=None, decode_chunk: int = 1,
                  prefill_buckets: bool = True):
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
@@ -129,8 +130,29 @@ class BatchServer:
                                                       max_len))
         self._batch_axes = (None if self._bucketed else
                             _cache_batch_axes(model, batch_slots, max_len))
-        self._gemm_cfg = (GemmConfig(algo=gemm_algo, quantized=True)
-                          if quantized else None)
+        # GEMM provider scope for the whole serving forward. ``gemm_impl``
+        # ("pallas") routes the projections through the Pallas kernels and
+        # ``gemm_block`` ("auto" / explicit (bm,bn,bk)) picks their tiling
+        # from the repro.tune schedule cache — so the PR 3 hot path runs
+        # under tuned blocks instead of one hardcoded constant. block="auto"
+        # also drives tuned flash-attention (bq, bk) during prefill, which is
+        # why a config is built even when impl stays "xla".
+        if quantized or gemm_impl is not None or gemm_block is not None:
+            impl = gemm_impl or "xla"
+            if (gemm_block is not None and gemm_block != "auto"
+                    and impl != "pallas"):
+                # explicit (bm,bn,bk) only reaches a kernel through the
+                # pallas provider; on xla it would be a silent no-op — the
+                # exact failure mode the tuner exists to remove.
+                raise ValueError(
+                    "explicit gemm_block requires gemm_impl='pallas' "
+                    "(block='auto' alone is fine: it also drives flash "
+                    "attention's tuned blocks)")
+            algo = gemm_algo if (quantized or impl == "pallas") else "baseline"
+            self._gemm_cfg = GemmConfig(algo=algo, impl=impl,
+                                        quantized=quantized, block=gemm_block)
+        else:
+            self._gemm_cfg = None
         self._qparams = None
         self._qparams_src = None
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))

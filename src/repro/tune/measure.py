@@ -1,0 +1,133 @@
+"""Measurement harness for the kernel autotuner.
+
+Discipline (the part micro-benchmarks usually get wrong):
+  * compilation happens OUTSIDE the timed region — one untimed warmup call per
+    candidate pays the jit/pallas build before any timer starts;
+  * median-of-k timing (default k=3) so one scheduler hiccup can't crown the
+    wrong candidate;
+  * candidates are timed in the deterministic order space.py emits, with a
+    first-wins tie-break, so a tuning run is reproducible bit-for-bit in its
+    *choice* even when wall-clock noise wiggles.
+
+``counters`` tracks how many candidates were actually timed — the cache tests
+assert ZERO new measurements on a warm-cache run, which is the whole point of
+persisting schedules.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels.compat import resolve_interpret
+
+counters: Dict[str, int] = {"timed_candidates": 0, "failed_candidates": 0}
+
+
+def median_time_s(fn: Callable, *args, iters: int = 3) -> float:
+    """Median wall time of ``fn(*args)`` over ``iters`` runs; the compile (and
+    any lazy constant folding) is flushed by one untimed warmup call."""
+    jax.block_until_ready(fn(*args))           # compile outside timed region
+    times: List[float] = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def _gemm_operands(m: int, k: int, n: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic operands (seeded host RNG, so the tuner itself never
+    perturbs jax PRNG state or depends on it)."""
+    rng = np.random.RandomState(0)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        a = rng.randint(-128, 128, size=(m, k)).astype(np.int8)
+        b = rng.randint(-128, 128, size=(k, n)).astype(np.int8)
+    else:
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        b = rng.standard_normal((k, n)).astype(np.float32)
+    return (jnp.asarray(a).astype(dtype), jnp.asarray(b).astype(dtype))
+
+
+def time_gemm_blocks(algo: str, a: jax.Array, b: jax.Array,
+                     blocks: Tuple[int, int, int], *,
+                     interpret: Optional[bool] = None,
+                     iters: int = 3) -> float:
+    bm, bn, bk = blocks
+    counters["timed_candidates"] += 1
+    fn = lambda a_, b_: kops.matmul(a_, b_, algo=algo, bm=bm, bn=bn, bk=bk,
+                                    interpret=resolve_interpret(interpret))
+    return median_time_s(fn, a, b, iters=iters)
+
+
+def best_gemm_blocks(algo: str, m: int, k: int, n: int, dtype,
+                     candidates: Sequence[Tuple[int, int, int]], *,
+                     interpret: Optional[bool] = None,
+                     iters: int = 3) -> Tuple[Tuple[int, int, int], float,
+                                              List[dict]]:
+    """Time every candidate on fresh deterministic operands; return
+    (best_blocks, best_seconds, per-candidate trace). First-listed wins ties;
+    a candidate that fails to build/run is recorded and skipped (never fatal —
+    the search space is allowed to be optimistic about odd backends)."""
+    a, b = _gemm_operands(m, k, n, dtype)
+    trace: List[dict] = []
+    best: Optional[Tuple[int, int, int]] = None
+    best_t = float("inf")
+    for blocks in candidates:
+        try:
+            t = time_gemm_blocks(algo, a, b, blocks, interpret=interpret,
+                                 iters=iters)
+        except Exception as e:                      # noqa: BLE001
+            counters["failed_candidates"] += 1
+            trace.append({"blocks": list(blocks), "error": str(e)[:200]})
+            continue
+        trace.append({"blocks": list(blocks), "us": round(t * 1e6, 1)})
+        if t < best_t:                              # strict <: first wins ties
+            best, best_t = blocks, t
+    if best is None:
+        raise RuntimeError(f"no GEMM candidate ran for {algo} "
+                           f"{m}x{k}x{n} {jnp.dtype(dtype).name}")
+    return best, best_t, trace
+
+
+def best_flash_blocks(bh: int, sq: int, sk: int, d: int, dtype,
+                      candidates: Sequence[Tuple[int, int]], *,
+                      interpret: Optional[bool] = None,
+                      iters: int = 3) -> Tuple[Tuple[int, int], float,
+                                               List[dict]]:
+    """Same contract as :func:`best_gemm_blocks` for the flash-attention
+    forward kernel (the serving prefill/train hot path)."""
+    from repro.kernels.flash_attention import flash_attention
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.standard_normal((bh, sq, d)).astype(np.float32),
+                    dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((bh, sk, d)).astype(np.float32),
+                    dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((bh, sk, d)).astype(np.float32),
+                    dtype=dtype)
+    itp = resolve_interpret(interpret)
+    trace: List[dict] = []
+    best: Optional[Tuple[int, int]] = None
+    best_t = float("inf")
+    for bq, bk in candidates:
+        try:
+            counters["timed_candidates"] += 1
+            fn = lambda q_, k_, v_: flash_attention(q_, k_, v_, 0, True, itp,
+                                                    bq, bk)
+            t = median_time_s(fn, q, k, v, iters=iters)
+        except Exception as e:                      # noqa: BLE001
+            counters["failed_candidates"] += 1
+            trace.append({"blocks": [bq, bk], "error": str(e)[:200]})
+            continue
+        trace.append({"blocks": [bq, bk], "us": round(t * 1e6, 1)})
+        if t < best_t:
+            best, best_t = (bq, bk), t
+    if best is None:
+        raise RuntimeError(f"no flash candidate ran for bh={bh} sq={sq} "
+                           f"sk={sk} d={d}")
+    return best, best_t, trace

@@ -129,6 +129,35 @@ def test_baseline_kernel_large_block():
                                rtol=1e-4, atol=1e-2)
 
 
+# --- pad-run-slice fallback + backend-auto interpret -------------------------
+
+@pytest.mark.parametrize("kernel", [baseline_gemm, fip_gemm, ffip_gemm])
+def test_kernel_direct_nondivisible_shapes_pad_and_slice(kernel):
+    """Raw kernels no longer hard-assert divisibility: shapes indivisible by
+    every block dim zero-pad, run, and slice — exactly (int path bit-checked),
+    so the tuner can consider any legal block on any shape and odd model dims
+    don't crash."""
+    a, b = make_inputs(20, 10, 13, jnp.int8, seed=21)
+    got = kernel(a, b, bm=16, bn=8, bk=4, interpret=True)
+    assert got.shape == (20, 13)
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_kernel_interpret_auto_default():
+    """interpret=None (the new default) resolves via the backend probe:
+    interpret-mode on this CPU host, compiled on TPU; explicit bools win."""
+    from repro.kernels import compat
+    assert compat.resolve_interpret(None) == (not compat.is_tpu_backend())
+    assert compat.resolve_interpret(True) is True
+    assert compat.resolve_interpret(False) is False
+    if compat.is_tpu_backend():   # container is CPU; guard for TPU runs
+        pytest.skip("auto-default smoke below assumes a CPU host")
+    a, b = make_inputs(16, 16, 16, jnp.float32, seed=22)
+    got = fip_gemm(a, b, bm=8, bn=8, bk=8)          # no interpret kwarg
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-3)
+
+
 # --- Pallas API-drift canary --------------------------------------------------
 # pltpu.CompilerParams/TPUCompilerParams has already been renamed once across
 # JAX releases. Build AND run every kernel entry point in interpret mode so

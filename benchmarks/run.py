@@ -8,6 +8,7 @@ Prints ``name,value,...`` CSV blocks; each maps to a paper artifact:
   table2.*  16-bit FFIP vs paper Table 2
   table3.*  ops/multiplier/cycle vs best prior works (Table 3)
   sec6p1.*  baseline vs FIP vs FFIP core claims
+  fig9x.*   modeled vs measured cross-check (reads benchmarks/BENCH_conv.json)
   gemm_micro.*  arithmetic-complexity measurements + host timings
   roofline.*    TPU dry-run roofline summary (reads benchmarks/results/dryrun)
 """
@@ -44,6 +45,7 @@ def main() -> None:
         accel_tables.table2(),
         accel_tables.table3(),
         accel_tables.fip_vs_ffip_vs_baseline(),
+        accel_tables.fig9_measured_crosscheck(),
         gemm_micro.run(),
         roofline_summary(),
     ]

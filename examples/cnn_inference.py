@@ -1,0 +1,56 @@
+"""CNN inference through the fused implicit-im2col (F)FIP conv kernels.
+
+The paper's headline workloads are CNNs executed on an array that maps conv
+to GEMM *on the fly* with the §5.1 address counters — no im2col matrix ever
+exists in memory. This example runs a small AlexNet three ways and checks
+they agree:
+
+  1. float reference (XLA conv — the MXU path),
+  2. fused implicit-im2col FFIP Pallas kernels (A only in VMEM tiles),
+  3. the int8 quantized path (offline weights: Eq. 15 folded beta + colsums
+     on the flattened KH*KW*Cin axis; Eq. 20 zero-point adjuster with
+     windowed row-sums).
+
+    PYTHONPATH=src python examples/cnn_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gemm import GemmConfig, use_gemm
+from repro.vision import models as vm
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    model = vm.build("alexnet", num_classes=10, image_size=67, width_div=8)
+    params = vm.init_params(model, key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 67, 67, 3))
+
+    # 1) float reference (default config: baseline algo, XLA conv)
+    ref = vm.apply(model, params, x)
+    print("float logits:", np.round(np.asarray(ref[0, :5]), 3))
+
+    # 2) fused implicit-im2col FFIP — same weights, same topology, the conv
+    #    -> GEMM mapping now happens inside the kernel per (bm, bk) block
+    with use_gemm(GemmConfig(algo="ffip", impl="pallas")):
+        fused = vm.apply(model, params, x)
+    err = float(jnp.max(jnp.abs(fused - ref)))
+    print(f"fused FFIP max |delta| vs float: {err:.2e}")
+    assert err < 1e-2
+
+    # 3) int8 quantized: BN-fold/weight prep happens offline (attach_quantized),
+    #    then the same forward runs on raw int8 operands
+    qparams = vm.attach_quantized(model, params)
+    with use_gemm(GemmConfig(algo="ffip", impl="pallas", quantized=True)):
+        q_logits = vm.apply(model, qparams, x)
+    rel = float(jnp.linalg.norm(q_logits - ref) / jnp.linalg.norm(ref))
+    agree = float((jnp.argmax(q_logits, -1) == jnp.argmax(ref, -1)).mean())
+    print(f"int8 FFIP rel err: {rel:.4f}  top-1 agreement: {agree:.0%}")
+    assert rel < 0.35
+
+    print("OK: conv -> GEMM mapped on the fly; im2col never materialized.")
+
+
+if __name__ == "__main__":
+    main()

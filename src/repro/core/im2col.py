@@ -16,13 +16,36 @@ GEMM without a standalone im2col re-layout stage. We reproduce:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+
+Size2 = Union[int, Tuple[int, int], Sequence[int]]
+
+
+def as_pair(v: Size2) -> Tuple[int, int]:
+    """Normalize a stride/padding argument to an (h, w) pair. A single int
+    means symmetric; whisper-style (asymmetric) convs and AlexNet's stride-4
+    conv1 share one code path this way."""
+    if isinstance(v, (tuple, list)):
+        if len(v) != 2:
+            raise ValueError(f"expected (h, w) pair, got {v!r}")
+        return int(v[0]), int(v[1])
+    return int(v), int(v)
+
+
+def conv_out_hw(h: int, w: int, kh: int, kw: int, stride: Size2 = 1,
+                pad: Size2 = 0) -> Tuple[int, int]:
+    """Conv/pool output spatial dims — THE output-size formula, shared by the
+    workload tables, the fused kernels, the tuner keys and the vision layers
+    (one place to change if dilation/SAME semantics ever arrive)."""
+    sh, sw = as_pair(stride)
+    ph, pw = as_pair(pad)
+    return (h + 2 * ph - kh) // sh + 1, (w + 2 * pw - kw) // sw + 1
 
 
 @dataclasses.dataclass
@@ -53,52 +76,78 @@ class MultiDigitCounter:
 
 
 def conv_gemm_indices(h: int, w: int, cin: int, kh: int, kw: int,
-                      stride: int = 1) -> np.ndarray:
+                      stride: Size2 = 1, *, groups: int = 1,
+                      group: int = 0) -> np.ndarray:
     """Algorithm-1 address pattern for one image: (M, K) indices into the
-    flattened (H, W, Cin) input, M = OH*OW, K = KH*KW*Cin.
+    flattened (H, W, Cin) input, M = OH*OW, K = KH*KW*(Cin/groups).
 
     Loop order mirrors Algorithm 1: the kernel-offset digits (kh, kw, cin)
     form K (k_offset), the spatial digits (h, w) form M (m_offset); the final
     address is their sum — no data movement, only address arithmetic.
+
+    ``stride`` may be a single int or an (sh, sw) pair — asymmetric strides
+    only change the per-digit stride constants, the counter is unchanged.
+    For grouped convolution the cin digit walks the group's channel slice
+    (size Cin/groups) and ``group`` adds the constant channel offset — the
+    §5.1 counters realize a group as one more programmable base address.
     """
-    oh = (h - kh) // stride + 1
-    ow = (w - kw) // stride + 1
-    # m_offset counter: h (row stride = stride*W*Cin), w (stride*Cin)
+    sh, sw = as_pair(stride)
+    if cin % groups:
+        raise ValueError(f"cin={cin} not divisible by groups={groups}")
+    cin_g = cin // groups
+    oh, ow = conv_out_hw(h, w, kh, kw, (sh, sw))
+    # m_offset counter: h (row stride = sh*W*Cin), w (sw*Cin)
     m_counter = MultiDigitCounter([
-        Digit("h", oh, stride * w * cin),
-        Digit("w", ow, stride * cin),
+        Digit("h", oh, sh * w * cin),
+        Digit("w", ow, sw * cin),
     ])
-    # k_offset counter: kh (W*Cin), kw (Cin), cin (1)
+    # k_offset counter: kh (W*Cin), kw (Cin), cin (1, within the group slice)
     k_counter = MultiDigitCounter([
         Digit("kh", kh, w * cin),
         Digit("kw", kw, cin),
-        Digit("cin", cin, 1),
+        Digit("cin", cin_g, 1),
     ])
     m_off = m_counter.addresses()            # (M,)
-    k_off = k_counter.addresses()            # (K,)
+    k_off = k_counter.addresses() + group * cin_g   # (K,)
     return m_off[:, None] + k_off[None, :]   # (M, K)
 
 
-def conv2d_via_gemm(x: Array, kernel: Array, *, stride: int = 1, pad: int = 0,
+def conv2d_via_gemm(x: Array, kernel: Array, *, stride: Size2 = 1,
+                    pad: Size2 = 0, groups: int = 1,
                     gemm_fn: Callable[[Array, Array], Array] | None = None) -> Array:
-    """NHWC conv via Algorithm-1 GEMM mapping.
+    """NHWC conv via Algorithm-1 GEMM mapping (the materializing reference).
 
-    x: (B, H, W, Cin); kernel: (KH, KW, Cin, Cout) -> (B, OH, OW, Cout).
+    x: (B, H, W, Cin); kernel: (KH, KW, Cin/groups, Cout) -> (B, OH, OW, Cout).
+    ``stride``/``pad`` take an int or an (h, w) pair. Grouped convolution is
+    the block-diagonal K split: group g contracts its own K = KH*KW*(Cin/g)
+    slice against its own Cout/groups weight columns (validated against
+    ``lax.conv_general_dilated(feature_group_count=groups)``).
     """
     if gemm_fn is None:
         gemm_fn = lambda a, b: jnp.matmul(a, b)
     b_, h, w, cin = x.shape
-    kh, kw, _, cout = kernel.shape
-    if pad:
-        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-        h, w = h + 2 * pad, w + 2 * pad
-    idx = jnp.asarray(conv_gemm_indices(h, w, cin, kh, kw, stride))  # (M, K)
-    oh = (h - kh) // stride + 1
-    ow = (w - kw) // stride + 1
+    kh, kw, cin_g, cout = kernel.shape
+    if groups * cin_g != cin:
+        raise ValueError(f"kernel expects cin/groups={cin_g}, "
+                         f"got cin={cin} groups={groups}")
+    if cout % groups:
+        raise ValueError(f"cout={cout} not divisible by groups={groups}")
+    sh, sw = as_pair(stride)
+    ph, pw = as_pair(pad)
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+        h, w = h + 2 * ph, w + 2 * pw
+    oh, ow = conv_out_hw(h, w, kh, kw, (sh, sw))
     flat = x.reshape(b_, h * w * cin)
-    a = flat[:, idx]                                # (B, M, K) gather, in-place map
-    bmat = kernel.reshape(kh * kw * cin, cout)      # (K, N)
-    c = gemm_fn(a, bmat)                            # (B, M, N)
+    ng = cout // groups
+    bmat = kernel.reshape(kh * kw * cin_g, cout)        # (K, Cout)
+    outs = []
+    for g in range(groups):
+        idx = jnp.asarray(conv_gemm_indices(
+            h, w, cin, kh, kw, (sh, sw), groups=groups, group=g))
+        a = flat[:, idx]                                # (B, M, K) gather
+        outs.append(gemm_fn(a, bmat[:, g * ng:(g + 1) * ng]))  # (B, M, Ng)
+    c = outs[0] if groups == 1 else jnp.concatenate(outs, axis=-1)
     return c.reshape(b_, oh, ow, cout)
 
 

@@ -1,1 +1,1 @@
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import conv_gemm, ops, ref  # noqa: F401

@@ -50,11 +50,13 @@ def _y_for(b: Array) -> Array:
     return y
 
 
-def _kernel(a_ref, y_ref, o_ref, carry_ref, *, acc_dtype, fold_beta):
-    kk = pl.program_id(1)
-    nn = pl.program_id(2)
-    a = a_ref[...].astype(acc_dtype)            # (bm, bk)
-    y = y_ref[...].astype(acc_dtype)            # (bk, bn) weight deltas
+def ffip_tile(a, y, carry_ref, nn, *, fold_beta: bool):
+    """Eqs. (7)-(9) on one tile: reconstruct the weight offsets from the y
+    deltas via the column prefix carried in ``carry_ref`` (reset when the N
+    sweep restarts at ``nn == 0``), then the pair product-sum minus alpha
+    (and beta unless folded). SHARED between this GEMM kernel and the fused
+    implicit-im2col conv kernels (kernels/conv_gemm.py) — one algebra, two
+    A-tile sources, so fused conv == materialized GEMM bit-for-bit."""
 
     @pl.when(nn == 0)
     def _reset():
@@ -75,6 +77,15 @@ def _kernel(a_ref, y_ref, o_ref, carry_ref, *, acc_dtype, fold_beta):
     if not fold_beta:
         beta = jnp.sum(b_odd * b_evn, axis=0)
         part = part - beta[None, :]
+    return part
+
+
+def _kernel(a_ref, y_ref, o_ref, carry_ref, *, acc_dtype, fold_beta):
+    kk = pl.program_id(1)
+    nn = pl.program_id(2)
+    a = a_ref[...].astype(acc_dtype)            # (bm, bk)
+    y = y_ref[...].astype(acc_dtype)            # (bk, bn) weight deltas
+    part = ffip_tile(a, y, carry_ref, nn, fold_beta=fold_beta)
 
     @pl.when(kk == 0)
     def _init():

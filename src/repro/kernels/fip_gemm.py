@@ -25,10 +25,12 @@ from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 Array = jax.Array
 
 
-def _kernel(a_ref, b_ref, o_ref, *, acc_dtype, fold_beta):
-    kk = pl.program_id(2)
-    a = a_ref[...].astype(acc_dtype)           # (bm, bk)
-    b = b_ref[...].astype(acc_dtype)           # (bk, bn)
+def fip_tile(a, b, *, fold_beta: bool):
+    """Eq. (2) on one (bm, bk) x (bk, bn) tile: pre-add, multiply, reduce
+    over the pair axis, subtract the alpha (and beta unless folded) rows.
+    SHARED between this GEMM kernel and the fused implicit-im2col conv
+    kernels (kernels/conv_gemm.py) — one algebra, two A-tile sources, so the
+    fused conv is bit-identical to the materialized GEMM by construction."""
     a_odd, a_evn = a[:, 0::2], a[:, 1::2]      # a_{i,2k-1}, a_{i,2k}
     b_odd, b_evn = b[0::2, :], b[1::2, :]      # b_{2k-1,j}, b_{2k,j}
     # Eq. (2) cross term on this tile: the FIP PE pre-adds then multiplies.
@@ -40,6 +42,14 @@ def _kernel(a_ref, b_ref, o_ref, *, acc_dtype, fold_beta):
     if not fold_beta:
         beta = jnp.sum(b_odd * b_evn, axis=0)    # Eq. (4)
         part = part - beta[None, :]
+    return part
+
+
+def _kernel(a_ref, b_ref, o_ref, *, acc_dtype, fold_beta):
+    kk = pl.program_id(2)
+    a = a_ref[...].astype(acc_dtype)           # (bm, bk)
+    b = b_ref[...].astype(acc_dtype)           # (bk, bn)
+    part = fip_tile(a, b, fold_beta=fold_beta)
 
     @pl.when(kk == 0)
     def _init():

@@ -16,6 +16,11 @@ re-measurement — ``--expect-cached`` turns that into a hard assertion (the CI
 tune-smoke job runs the tuner twice and requires the second run to measure
 nothing). Serving picks the schedules up via ``--gemm-block auto``
 (launch.serve / BatchServer) and ``GemmConfig(block="auto")``.
+
+The ``--workload`` path tunes the conv-as-GEMM shape tables (the
+materializing path); FUSED implicit-im2col conv schedules are tuned at real
+conv geometry by ``python -m repro.launch.vision --model X --tune`` instead
+(conv-specific candidate space: bk aligned to Cin_g*KW multiples).
 """
 from __future__ import annotations
 

@@ -38,8 +38,9 @@ from repro.tune.cache import ScheduleCache, get_cache, make_key
 
 __all__ = [
     "ScheduleCache", "get_cache", "make_key", "device_kind",
-    "gemm_key", "flash_key", "lookup_gemm_blocks", "lookup_flash_blocks",
-    "tune_gemm", "tune_flash", "stats", "reset_stats",
+    "gemm_key", "flash_key", "conv_key",
+    "lookup_gemm_blocks", "lookup_flash_blocks", "lookup_conv_blocks",
+    "tune_gemm", "tune_flash", "tune_conv", "stats", "reset_stats",
 ]
 
 logger = logging.getLogger("repro.tune")
@@ -79,6 +80,18 @@ def flash_key(dtype, bh: int, sq: int, sk: int, d: int, *,
                     f"bh{bhb}sq{sqb}sk{skb}d{d}", device or device_kind())
 
 
+def conv_key(algo: str, dtype, m: int, n: int, k: int, ckw: int, *,
+             device: Optional[str] = None) -> str:
+    """Schedule key for the fused implicit-im2col conv kernels. Buckets the
+    per-image GEMM view (m = OH*OW, n = Cout/groups, k = KH*KW*Cin_g) like
+    the GEMM keys, but keeps ``ckw`` = Cin_g*KW exact — it defines the
+    bk-alignment structure of the candidate space, so shapes that bucket
+    together but gather differently don't share a schedule."""
+    mb, nb, kb = _bucket(m, n, k)
+    return make_key("conv", algo, _dtype_name(dtype),
+                    f"m{mb}n{nb}k{kb}ckw{ckw}", device or device_kind())
+
+
 def _miss(key: str) -> None:
     stats["misses"] += 1
     if key not in _warned_keys:
@@ -113,6 +126,18 @@ def lookup_flash_blocks(dtype, bh: int, sq: int, sk: int, d: int, *,
     stats["hits"] += 1
     b = entry["blocks"]
     return (b["bq"], b["bk"])
+
+
+def lookup_conv_blocks(algo: str, dtype, m: int, n: int, k: int, ckw: int, *,
+                       cache: Optional[ScheduleCache] = None,
+                       ) -> Optional[Tuple[int, int, int]]:
+    key = conv_key(algo, dtype, m, n, k, ckw)
+    entry = (cache if cache is not None else get_cache()).lookup(key)
+    if entry is None:
+        return _miss(key)
+    stats["hits"] += 1
+    b = entry["blocks"]
+    return (b["bm"], b["bn"], b["bk"])
 
 
 # -- offline tuning ---------------------------------------------------------
@@ -152,6 +177,59 @@ def tune_gemm(m: int, n: int, k: int, dtype, *, algo: str = "ffip",
         "default_us": default_t,
         "candidates": len(trace),
         "iters": iters,
+    }
+    cache.put(key, entry, persist=persist)
+    logger.info("tuned %s -> %s (%.1fus over %d candidates)", key,
+                entry["blocks"], entry["us"], entry["candidates"])
+    return entry
+
+
+def tune_conv(batch: int, h: int, w: int, cin: int, cout: int, kh: int,
+              kw: int, dtype, *, stride=1, pad=0, groups: int = 1,
+              algo: str = "ffip", budget: int = 0, iters: int = 3,
+              interpret: Optional[bool] = None,
+              cache: Optional[ScheduleCache] = None,
+              force: bool = False, persist: bool = True) -> dict:
+    """Tune one fused-conv geometry; same contract as :func:`tune_gemm`.
+
+    Measures the fused implicit-im2col kernel at the REAL geometry (the
+    gather pattern is part of the cost), keyed by the bucketed per-image GEMM
+    view + the exact ``ckw`` alignment — shapes sharing a bucket reuse the
+    first-measured member's schedule (the CLI dedupes by key before tuning).
+    """
+    from repro.core.im2col import as_pair, conv_out_hw
+    cache = cache if cache is not None else get_cache()
+    sh, sw = as_pair(stride)
+    ph, pw = as_pair(pad)
+    cin_g = cin // groups
+    k = kh * kw * cin_g
+    ckw = cin_g * kw
+    oh, ow = conv_out_hw(h, w, kh, kw, (sh, sw), (ph, pw))
+    m, n = oh * ow, cout // groups
+    key = conv_key(algo, dtype, m, n, k, ckw)
+    entry = None if force else cache.lookup(key)
+    if entry is not None:
+        return entry
+    cands = space.conv_candidates(m, n, k, ckw, algo)
+    if budget:
+        cands = cands[:budget]
+    best, best_t, trace = measure.best_conv_blocks(
+        algo, batch, h, w, cin, kh, kw, cout, dtype, cands,
+        stride=(sh, sw), pad=(ph, pw), groups=groups, interpret=interpret,
+        iters=iters)
+    default_t = next((t["us"] for t in trace
+                      if tuple(t["blocks"]) == cands[0] and "us" in t), None)
+    entry = {
+        "blocks": {"bm": best[0], "bn": best[1], "bk": best[2]},
+        "us": round(best_t * 1e6, 1),
+        "default_blocks": {"bm": cands[0][0], "bn": cands[0][1],
+                           "bk": cands[0][2]},
+        "default_us": default_t,
+        "candidates": len(trace),
+        "iters": iters,
+        "geometry": {"batch": batch, "h": h, "w": w, "cin": cin, "cout": cout,
+                     "kh": kh, "kw": kw, "stride": [sh, sw], "pad": [ph, pw],
+                     "groups": groups},
     }
     cache.put(key, entry, persist=persist)
     logger.info("tuned %s -> %s (%.1fus over %d candidates)", key,

@@ -95,6 +95,66 @@ def best_gemm_blocks(algo: str, m: int, k: int, n: int, dtype,
     return best, best_t, trace
 
 
+def _conv_operands(batch: int, h: int, w: int, cin: int, kh: int, kw: int,
+                   cout: int, groups: int, dtype):
+    rng = np.random.RandomState(0)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        x = rng.randint(-128, 128, size=(batch, h, w, cin)).astype(np.int8)
+        k = rng.randint(-128, 128,
+                        size=(kh, kw, cin // groups, cout)).astype(np.int8)
+    else:
+        x = rng.standard_normal((batch, h, w, cin)).astype(np.float32)
+        k = rng.standard_normal((kh, kw, cin // groups, cout)).astype(np.float32)
+    return (jnp.asarray(x).astype(dtype), jnp.asarray(k).astype(dtype))
+
+
+def time_conv_blocks(algo: str, x: jax.Array, kernel: jax.Array,
+                     blocks: Tuple[int, int, int], *, stride=1, pad=0,
+                     groups: int = 1, interpret: Optional[bool] = None,
+                     iters: int = 3) -> float:
+    from repro.kernels import conv_gemm
+    bm, bn, bk = blocks
+    counters["timed_candidates"] += 1
+    fn = lambda x_, k_: conv_gemm.conv_gemm_fused(
+        x_, k_, stride=stride, pad=pad, groups=groups, algo=algo,
+        bm=bm, bn=bn, bk=bk, interpret=resolve_interpret(interpret))
+    return median_time_s(fn, x, kernel, iters=iters)
+
+
+def best_conv_blocks(algo: str, batch: int, h: int, w: int, cin: int,
+                     kh: int, kw: int, cout: int, dtype,
+                     candidates: Sequence[Tuple[int, int, int]], *,
+                     stride=1, pad=0, groups: int = 1,
+                     interpret: Optional[bool] = None,
+                     iters: int = 3) -> Tuple[Tuple[int, int, int], float,
+                                              List[dict]]:
+    """Time the fused implicit-im2col conv kernel over the candidate blocks
+    at the REAL conv geometry (the gather address pattern is part of what a
+    block choice changes, so conv schedules are measured on the conv kernel,
+    not on an equivalent GEMM). Same contract as :func:`best_gemm_blocks`."""
+    x, kernel = _conv_operands(batch, h, w, cin, kh, kw, cout, groups, dtype)
+    trace: List[dict] = []
+    best: Optional[Tuple[int, int, int]] = None
+    best_t = float("inf")
+    for blocks in candidates:
+        try:
+            t = time_conv_blocks(algo, x, kernel, blocks, stride=stride,
+                                 pad=pad, groups=groups, interpret=interpret,
+                                 iters=iters)
+        except Exception as e:                      # noqa: BLE001
+            counters["failed_candidates"] += 1
+            trace.append({"blocks": list(blocks), "error": str(e)[:200]})
+            continue
+        trace.append({"blocks": list(blocks), "us": round(t * 1e6, 1)})
+        if t < best_t:                              # strict <: first wins ties
+            best, best_t = blocks, t
+    if best is None:
+        raise RuntimeError(f"no conv candidate ran for {algo} "
+                           f"{batch}x{h}x{w}x{cin} k{kh}x{kw} "
+                           f"{jnp.dtype(dtype).name}")
+    return best, best_t, trace
+
+
 def best_flash_blocks(bh: int, sq: int, sk: int, d: int, dtype,
                       candidates: Sequence[Tuple[int, int]], *,
                       interpret: Optional[bool] = None,

@@ -95,6 +95,47 @@ def gemm_candidates(m: int, n: int, k: int, algo: str,
                               key=lambda c: (dist(c), c))
 
 
+def conv_candidates(m: int, n: int, k: int, ckw: int, algo: str,
+                    itemsize: int = 4) -> List[Blocks]:
+    """Candidates for the fused implicit-im2col conv kernels.
+
+    Same legality as the GEMM space, but the bk axis prefers MULTIPLES OF
+    ``ckw`` = Cin_g * KW — one full kernel-window row of the flattened
+    (kh, kw, cin) contraction axis per block, so a k-block's gather walks
+    contiguous input rows (the §5.1.1 W-partitioning locality). For the
+    FIP-family pair algebra bk must also be even: odd ``ckw`` contributes its
+    even multiples only. Power-of-2 bk values stay in the space as the
+    fallback (they are what ``ops.choose_blocks`` defaults to), and the
+    static default remains candidate 0 — tuning can only match-or-beat it.
+    """
+    ckw = max(1, ckw)
+    aligned = []
+    mult = ckw
+    while mult <= min(k, max(GEMM_BK_BASELINE)):
+        if mult % 2 == 0 or algo == "baseline":
+            aligned.append(mult)
+        mult += ckw
+    bks = GEMM_BK_FIP if algo in ("fip", "ffip") else GEMM_BK_BASELINE
+    bk_cap = round_up_pow2(k, lo=2)
+    bk_axis = sorted(set(list(aligned) + [b for b in bks if b <= bk_cap]))
+    bm_cap = round_up_pow2(m)
+    bn_cap = round_up_pow2(n)
+    cands = [
+        (bm, bn, bk)
+        for bm in GEMM_BM if bm <= bm_cap
+        for bn in GEMM_BN if bn <= bn_cap
+        for bk in bk_axis
+        if gemm_block_legal(bm, bn, bk, algo, itemsize)]
+    default = tuple(kops.choose_blocks(m, n, k, algo, itemsize))
+
+    def dist(c):
+        return sum(abs(x.bit_length() - d.bit_length())
+                   for x, d in zip(c, default))
+
+    return [default] + sorted((c for c in cands if c != default),
+                              key=lambda c: (dist(c), c))
+
+
 def flash_candidates(sq: int, sk: int) -> List[Tuple[int, int]]:
     """(bq, bk) candidates for flash attention; default (128, 128) first.
     The kernel clamps blocks to the (padded) sequence lengths itself."""

@@ -1,0 +1,13 @@
+"""`repro.vision` — the CNN inference pipeline over the fused
+implicit-im2col conv kernels.
+
+  * :mod:`repro.vision.layers` — conv/pool/BN-fold/ReLU layers routed
+    through the ambient :class:`repro.core.gemm.GemmConfig` (algo, impl,
+    ``quantized=``, ``block="auto"`` all apply to convs);
+  * :mod:`repro.vision.models` — runnable AlexNet / VGG-16 / ResNet-50
+    built from the ``core.workloads`` conv-spec tables;
+  * the kernels themselves live in :mod:`repro.kernels.conv_gemm`.
+
+CLI: ``python -m repro.launch.vision`` (classify smoke + conv tuning).
+"""
+from repro.vision import layers, models  # noqa: F401

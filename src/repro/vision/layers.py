@@ -1,0 +1,194 @@
+"""Vision layers — every conv routes through the GEMM provider config.
+
+``conv2d`` is the conv analogue of ``repro.models.layers.dense``: the ambient
+:class:`repro.core.gemm.GemmConfig` chooses the arithmetic (baseline / FIP /
+FFIP), the implementation, the block policy AND the int8 mode:
+
+  impl      float path                              quantized path ("q" in p)
+  --------  --------------------------------------  -------------------------
+  pallas    fused implicit-im2col kernels            fused int8 kernels
+            (kernels/conv_gemm.py; A never in HBM)   (+ Eq. 15/20 epilogue)
+  xla/ref   baseline -> lax.conv (the MXU path);     materializing int8
+            fip/ffip -> Algorithm-1 materialized     reference (core.fip
+            A + the provider's GEMM algebra          closed forms)
+
+``block="auto"`` resolves fused-conv (bm, bn, bk) from the ``repro.tune``
+schedule cache under the conv-specific key (bk aligned to Cin_g*KW), falling
+back to the static defaults on a miss — identical contract to the GEMM
+providers. BN folding (:func:`fold_bn`) happens offline, before quantization,
+exactly as the paper's deployment flow folds beta into the bias.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import im2col, quant
+from repro.core.gemm import GemmConfig, current_config, gemm
+from repro.core.im2col import Size2, as_pair, conv_out_hw
+from repro.kernels import conv_gemm
+
+Array = jax.Array
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int, *, groups: int = 1,
+              bias: bool = True, dtype=jnp.float32) -> dict:
+    """He-style init for a (KH, KW, Cin/groups, Cout) filter."""
+    cin_g = cin // groups
+    fan_in = kh * kw * cin_g
+    std = (2.0 / fan_in) ** 0.5
+    p = {"w": (jax.random.normal(key, (kh, kw, cin_g, cout), jnp.float32)
+               * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((cout,), dtype)
+    return p
+
+
+def _effective_algo(cfg: GemmConfig) -> str:
+    """Quantized mode runs the integer pair algebra; plain baseline keeps the
+    reference integer path (mirrors models.layers.dense)."""
+    return cfg.algo if cfg.algo != "baseline" else "ffip"
+
+
+def _resolve_conv_blocks(cfg: GemmConfig, algo: str, dtype, *, oh: int,
+                         ow: int, k: int, n: int, ckw: int,
+                         ) -> Tuple[int, int, int]:
+    """Trace-time (bm, bn, bk) for the fused conv kernels; (0, 0, 0) = static
+    default. ``block="auto"`` consults the repro.tune conv schedules under
+    ``algo`` — the algo the kernel will actually run (the quantized and
+    float-fallback paths can differ from cfg.algo)."""
+    if cfg.block is None:
+        return (0, 0, 0)
+    if isinstance(cfg.block, (tuple, list)):
+        bm, bn, bk = cfg.block
+        return (int(bm), int(bn), int(bk))
+    if cfg.block == "auto":
+        from repro import tune
+        got = tune.lookup_conv_blocks(algo, dtype, oh * ow, n, k, ckw)
+        return got if got is not None else (0, 0, 0)
+    raise ValueError(
+        f"GemmConfig.block must be None, 'auto' or (bm, bn, bk); "
+        f"got {cfg.block!r}")
+
+
+def conv2d(x: Array, p: dict, *, stride: Size2 = 1, pad: Size2 = 0,
+           groups: int = 1) -> Array:
+    """NHWC conv through the ambient GemmConfig. x: (B, H, W, Cin);
+    p["w"]: (KH, KW, Cin/groups, Cout); optional p["b"], p["q"]."""
+    cfg = current_config()
+    w = p["w"]
+    kh, kw, cin_g, cout = w.shape
+    sh, sw = as_pair(stride)
+    ph, pw = as_pair(pad)
+    oh, ow = conv_out_hw(x.shape[1], x.shape[2], kh, kw, (sh, sw), (ph, pw))
+    if cfg.quantized and "q" in p:
+        algo = _effective_algo(cfg)
+        if cfg.impl == "pallas":
+            bm, bn, bk = _resolve_conv_blocks(
+                cfg, algo, jnp.int8, oh=oh, ow=ow, k=kh * kw * cin_g,
+                n=cout // groups, ckw=cin_g * kw)
+            out = conv_gemm.quantized_conv_apply(
+                x, p["q"], stride=(sh, sw), pad=(ph, pw), algo=algo,
+                bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)
+        else:
+            out = conv_gemm.quantized_conv_reference(
+                x, p["q"], stride=(sh, sw), pad=(ph, pw), algo=algo)
+        out = out.astype(x.dtype)
+    elif cfg.impl == "pallas":
+        bm, bn, bk = _resolve_conv_blocks(
+            cfg, cfg.algo, jnp.result_type(x.dtype, w.dtype), oh=oh, ow=ow,
+            k=kh * kw * cin_g, n=cout // groups, ckw=cin_g * kw)
+        out = conv_gemm.conv_gemm_fused(
+            x, w, stride=(sh, sw), pad=(ph, pw), groups=groups, algo=cfg.algo,
+            bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)
+    elif cfg.algo == "baseline":
+        out = jax.lax.conv_general_dilated(
+            x, w, (sh, sw), [(ph, ph), (pw, pw)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+    else:
+        # Algorithm-1 materializing path through the provider's algebra
+        out = im2col.conv2d_via_gemm(
+            x, w, stride=(sh, sw), pad=(ph, pw), groups=groups,
+            gemm_fn=lambda a, b: gemm(a, b, cfg))
+    if "b" in p:
+        out = out + p["b"]
+    return out
+
+
+def relu(x: Array) -> Array:
+    return jax.nn.relu(x)
+
+
+def maxpool2d(x: Array, *, size: Size2 = 2, stride: Optional[Size2] = None,
+              pad: Size2 = 0) -> Array:
+    """NHWC max pool (AlexNet/VGG 3x3-s2 / 2x2-s2, ResNet stem 3x3-s2-p1)."""
+    kh, kw = as_pair(size)
+    sh, sw = as_pair(stride if stride is not None else size)
+    ph, pw = as_pair(pad)
+    neg = (jnp.finfo(x.dtype).min if jnp.issubdtype(x.dtype, jnp.floating)
+           else jnp.iinfo(x.dtype).min)
+    return jax.lax.reduce_window(
+        x, neg, jax.lax.max, (1, kh, kw, 1), (1, sh, sw, 1),
+        [(0, 0), (ph, ph), (pw, pw), (0, 0)])
+
+
+def global_avgpool(x: Array) -> Array:
+    """(B, H, W, C) -> (B, C)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# BN folding — the offline inference transform (fold BEFORE quantization).
+# ---------------------------------------------------------------------------
+
+def bn_init(cout: int, dtype=jnp.float32) -> dict:
+    return {"gamma": jnp.ones((cout,), dtype), "beta": jnp.zeros((cout,), dtype),
+            "mean": jnp.zeros((cout,), dtype), "var": jnp.ones((cout,), dtype)}
+
+
+def batchnorm(x: Array, bn: dict, eps: float = 1e-5) -> Array:
+    """Inference-mode BN (running statistics) — the reference fold_bn must
+    reproduce exactly through the conv."""
+    inv = jax.lax.rsqrt(bn["var"].astype(jnp.float32) + eps)
+    return ((x.astype(jnp.float32) - bn["mean"]) * inv * bn["gamma"]
+            + bn["beta"]).astype(x.dtype)
+
+
+def fold_bn(conv_p: dict, bn: dict, eps: float = 1e-5) -> dict:
+    """Fold inference BN into the preceding conv: w' = w * g/sqrt(v+eps) per
+    output channel, b' = (b - mean) * g/sqrt(v+eps) + beta. Run before
+    ``prepare_quantized_conv`` so the int8 path quantizes the folded filter
+    (the same offline ordering as the paper's Eq. 15 beta fold)."""
+    inv = jax.lax.rsqrt(bn["var"].astype(jnp.float32) + eps)
+    scale = (bn["gamma"].astype(jnp.float32) * inv)
+    w = conv_p["w"].astype(jnp.float32) * scale          # broadcast over Cout
+    b = conv_p.get("b")
+    b = jnp.zeros_like(scale) if b is None else b.astype(jnp.float32)
+    b = (b - bn["mean"].astype(jnp.float32)) * scale + bn["beta"].astype(jnp.float32)
+    out = dict(conv_p)
+    out["w"] = w.astype(conv_p["w"].dtype)
+    out["b"] = b.astype(conv_p["w"].dtype)
+    return out
+
+
+def attach_quantized_conv(p: dict, *, groups: int = 1, dtype=jnp.int8) -> dict:
+    """Attach the offline int8 entry next to a conv's float weights (the conv
+    analogue of ``core.quant.attach_quantized_weights``)."""
+    out = dict(p)
+    out["q"] = conv_gemm.prepare_quantized_conv(p["w"], groups=groups,
+                                                dtype=dtype)
+    return out
+
+
+def attach_quantized_fc(p: dict, *, dtype=jnp.int8) -> dict:
+    """Attach the serving-style int8 entry to an FC layer when its
+    contraction dim is even (odd-K layers stay float, as in the LM path)."""
+    w = p["w"]
+    if w.shape[-2] % 2 != 0:
+        return p
+    out = dict(p)
+    out["q"] = quant.prepare_quantized_dense(w, dtype=dtype)
+    return out

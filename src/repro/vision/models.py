@@ -1,0 +1,346 @@
+"""Runnable CNN models built from the core.workloads conv-spec tables.
+
+The paper's headline workloads (AlexNet / VGG-16 / ResNet-50, Fig. 9 and
+Tables 1-3) exist in ``repro.core.workloads`` as structured ConvSpec tables;
+this module turns the same tables into runnable JAX models: channels,
+kernels, strides, pads and groups come FROM the tables, while spatial dims
+recompute from the actual input so a smoke-sized image flows through the
+identical topology (``width_div`` shrinks channel counts for CI smokes; the
+FC input dim is shape-inferred, never hardcoded).
+
+Every conv routes through :func:`repro.vision.layers.conv2d`, i.e. through
+the ambient GemmConfig — ``use_gemm(GemmConfig(algo="ffip", impl="pallas",
+block="auto", quantized=True))`` swaps the whole model onto the fused int8
+implicit-im2col kernels with tuned schedules, no model changes.
+
+Classic normalization layers are treated the way the deployment flow would:
+LRN (AlexNet) is omitted, BN (ResNet) initializes pre-folded — the
+:func:`repro.vision.layers.fold_bn` transform is exercised at the layer
+level, and :func:`attach_quantized` quantizes whatever the folded weights
+are.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import workloads
+from repro.vision import layers as vl
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Layer descriptors (static topology; params live in a parallel pytree)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    name: str
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    stride: Tuple[int, int] = (1, 1)
+    pad: Tuple[int, int] = (0, 0)
+    groups: int = 1
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool:
+    size: Tuple[int, int] = (2, 2)
+    stride: Tuple[int, int] = (2, 2)
+    pad: Tuple[int, int] = (0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAvgPool:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class FC:
+    name: str
+    cin: int
+    cout: int
+    relu: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Bottleneck:
+    """ResNet bottleneck: c1 -> c2 -> c3 (+ optional projection shortcut),
+    ReLU after the residual add."""
+    name: str
+    c1: Conv
+    c2: Conv
+    c3: Conv
+    proj: Optional[Conv] = None
+
+
+Layer = Union[Conv, MaxPool, GlobalAvgPool, Flatten, FC, Bottleneck]
+
+
+def _conv_apply(x: Array, layer: Conv, p: dict) -> Array:
+    out = vl.conv2d(x, p, stride=layer.stride, pad=layer.pad,
+                    groups=layer.groups)
+    return vl.relu(out) if layer.relu else out
+
+
+def init_params(model: Sequence[Layer], key, dtype=jnp.float32) -> list:
+    """One params entry per layer (None for parameterless layers)."""
+    params: list = []
+    for layer in model:
+        if isinstance(layer, Conv):
+            key, sub = jax.random.split(key)
+            params.append(vl.conv_init(sub, layer.kh, layer.kw, layer.cin,
+                                       layer.cout, groups=layer.groups,
+                                       dtype=dtype))
+        elif isinstance(layer, FC):
+            from repro.models.layers import dense_init
+            key, sub = jax.random.split(key)
+            params.append(dense_init(sub, layer.cin, layer.cout, dtype,
+                                     bias=True))
+        elif isinstance(layer, Bottleneck):
+            entry = {}
+            for field in ("c1", "c2", "c3", "proj"):
+                conv = getattr(layer, field)
+                if conv is None:
+                    continue
+                key, sub = jax.random.split(key)
+                entry[field] = vl.conv_init(sub, conv.kh, conv.kw, conv.cin,
+                                            conv.cout, groups=conv.groups,
+                                            dtype=dtype)
+            params.append(entry)
+        else:
+            params.append(None)
+    return params
+
+
+def apply(model: Sequence[Layer], params: Sequence, x: Array) -> Array:
+    """Forward pass: (B, H, W, Cin) image -> (B, num_classes) logits."""
+    from repro.models.layers import dense
+    for layer, p in zip(model, params):
+        if isinstance(layer, Conv):
+            x = _conv_apply(x, layer, p)
+        elif isinstance(layer, MaxPool):
+            x = vl.maxpool2d(x, size=layer.size, stride=layer.stride,
+                             pad=layer.pad)
+        elif isinstance(layer, GlobalAvgPool):
+            x = vl.global_avgpool(x)
+        elif isinstance(layer, Flatten):
+            x = x.reshape(x.shape[0], -1)
+        elif isinstance(layer, FC):
+            x = dense(x, p)
+            if layer.relu:
+                x = vl.relu(x)
+        elif isinstance(layer, Bottleneck):
+            y = _conv_apply(x, layer.c1, p["c1"])
+            y = _conv_apply(y, layer.c2, p["c2"])
+            y = _conv_apply(y, layer.c3, p["c3"])
+            sc = (_conv_apply(x, layer.proj, p["proj"])
+                  if layer.proj is not None else x)
+            x = vl.relu(y + sc)
+        else:
+            raise TypeError(f"unknown layer {layer!r}")
+    return x
+
+
+def attach_quantized(model: Sequence[Layer], params: Sequence,
+                     dtype=jnp.int8) -> list:
+    """Offline int8 preparation for a whole vision model: convs get the
+    fused-conv q entry (folded beta + colsums on the flattened KH*KW*Cin_g
+    axis), even-K FCs get the serving-style dense q entry."""
+    out: list = []
+    for layer, p in zip(model, params):
+        if isinstance(layer, Conv):
+            out.append(vl.attach_quantized_conv(p, groups=layer.groups,
+                                                dtype=dtype))
+        elif isinstance(layer, FC):
+            out.append(vl.attach_quantized_fc(p, dtype=dtype))
+        elif isinstance(layer, Bottleneck):
+            entry = dict(p)
+            for field in ("c1", "c2", "c3", "proj"):
+                conv = getattr(layer, field)
+                if conv is not None:
+                    entry[field] = vl.attach_quantized_conv(
+                        p[field], groups=conv.groups, dtype=dtype)
+            out.append(entry)
+        else:
+            out.append(p)
+    return out
+
+
+def conv_layers(model: Sequence[Layer]) -> List[Conv]:
+    """All convs in the model, bottlenecks flattened (tuning / benches)."""
+    convs: List[Conv] = []
+    for layer in model:
+        if isinstance(layer, Conv):
+            convs.append(layer)
+        elif isinstance(layer, Bottleneck):
+            convs += [c for c in (layer.c1, layer.c2, layer.c3, layer.proj)
+                      if c is not None]
+    return convs
+
+
+def conv_geometries(model: Sequence[Layer],
+                    image_size: int) -> List[Tuple[Conv, int, int]]:
+    """(conv, input_h, input_w) for every conv, tracking the spatial flow
+    from ``image_size`` — the geometry set the conv tuner measures at."""
+    out: List[Tuple[Conv, int, int]] = []
+    h = w = image_size
+    for layer in model:
+        if isinstance(layer, Conv):
+            out.append((layer, h, w))
+        elif isinstance(layer, Bottleneck):
+            bh, bw = h, w
+            for conv in (layer.c1, layer.c2, layer.c3):
+                out.append((conv, bh, bw))
+                bh, bw = _spatial(conv, bh, bw)
+            if layer.proj is not None:
+                out.append((layer.proj, h, w))
+        h, w = _spatial(layer, h, w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Builders from the workload tables
+# ---------------------------------------------------------------------------
+
+def _div_ch(c: int, div: int, groups: int = 1) -> int:
+    """Shrink a channel count for smoke models, keeping it a positive
+    multiple of 2*groups (grouped convs stay grouped, K stays evenizable)."""
+    unit = 2 * groups
+    return max(unit, (c // div) // unit * unit)
+
+
+def _spatial(layer, h: int, w: int) -> Tuple[int, int]:
+    from repro.core.im2col import conv_out_hw
+    if isinstance(layer, Conv):
+        return conv_out_hw(h, w, layer.kh, layer.kw, layer.stride, layer.pad)
+    if isinstance(layer, MaxPool):
+        return conv_out_hw(h, w, layer.size[0], layer.size[1], layer.stride,
+                           layer.pad)
+    if isinstance(layer, Bottleneck):
+        for conv in (layer.c1, layer.c2, layer.c3):
+            h, w = _spatial(conv, h, w)
+        return h, w
+    return h, w
+
+
+def _conv_from_spec(spec: workloads.ConvSpec, cin: int, cout: int,
+                    relu: bool = True) -> Conv:
+    return Conv(spec.name, spec.kh, spec.kw, cin, cout, spec.stride,
+                spec.pad, spec.groups, relu)
+
+
+def build_alexnet(num_classes: int = 1000, image_size: int = 227,
+                  width_div: int = 1) -> List[Layer]:
+    """AlexNet from workloads.alexnet_convs() (grouped conv2/4/5; LRN
+    omitted). Pools after conv1/conv2/conv5 as in the original."""
+    specs = {s.name: s for s in workloads.alexnet_convs()}
+    chans = {"in": 3}
+    for name in ("conv1", "conv2", "conv3", "conv4", "conv5"):
+        s = specs[name]
+        chans[name] = _div_ch(s.cout, width_div, s.groups)
+    model: List[Layer] = []
+    cin = 3
+    h = w = image_size
+    for name in ("conv1", "conv2", "conv3", "conv4", "conv5"):
+        s = specs[name]
+        conv = _conv_from_spec(s, cin, chans[name])
+        model.append(conv)
+        h, w = _spatial(conv, h, w)
+        cin = chans[name]
+        if name in ("conv1", "conv2", "conv5") and min(h, w) >= 3:
+            pool = MaxPool((3, 3), (2, 2))
+            model.append(pool)
+            h, w = _spatial(pool, h, w)
+    model.append(Flatten())
+    flat = h * w * cin
+    fcs = workloads.ALEXNET_FCS
+    d6 = _div_ch(fcs[0][2], width_div)
+    d7 = _div_ch(fcs[1][2], width_div)
+    model += [FC("fc6", flat, d6, relu=True), FC("fc7", d6, d7, relu=True),
+              FC("fc8", d7, num_classes)]
+    return model
+
+
+def build_vgg16(num_classes: int = 1000, image_size: int = 224,
+                width_div: int = 1) -> List[Layer]:
+    """VGG-16 from workloads.VGG16_PLAN (3x3 pad-1 stacks + 2x2 pools)."""
+    model: List[Layer] = []
+    cin = 3
+    h = w = image_size
+    for cout, reps, _res in workloads.VGG16_PLAN:
+        cd = _div_ch(cout, width_div)
+        for _ in range(reps):
+            conv = Conv(f"conv{len([l for l in model if isinstance(l, Conv)]) + 1}",
+                        3, 3, cin, cd, pad=(1, 1))
+            model.append(conv)
+            h, w = _spatial(conv, h, w)
+            cin = cd
+        if min(h, w) >= 2:
+            pool = MaxPool((2, 2), (2, 2))
+            model.append(pool)
+            h, w = _spatial(pool, h, w)
+    model.append(Flatten())
+    flat = h * w * cin
+    d1 = _div_ch(workloads.VGG16_FCS[0][2], width_div)
+    d2 = _div_ch(workloads.VGG16_FCS[1][2], width_div)
+    model += [FC("fc1", flat, d1, relu=True), FC("fc2", d1, d2, relu=True),
+              FC("fc3", d2, num_classes)]
+    return model
+
+
+def build_resnet50(num_classes: int = 1000, image_size: int = 224,
+                   width_div: int = 1) -> List[Layer]:
+    """ResNet-50 from workloads.resnet_blocks (bottlenecks with projection
+    shortcuts; BN pre-folded into the convs — see module docstring)."""
+    stem_spec = workloads.RESNET_STEM
+    c_stem = _div_ch(stem_spec.cout, width_div)
+    model: List[Layer] = [
+        _conv_from_spec(stem_spec, 3, c_stem),
+        MaxPool((3, 3), (2, 2), pad=(1, 1)),
+    ]
+    cin = c_stem
+    for blk in workloads.resnet_blocks(workloads.RESNET_STAGES["resnet50"]):
+        width = _div_ch(blk.width, width_div)
+        cout = _div_ch(blk.cout, width_div)
+        st = (blk.stride, blk.stride)
+        c1 = Conv(f"{blk.name}.c1", 1, 1, cin, width, stride=st)
+        c2 = Conv(f"{blk.name}.c2", 3, 3, width, width, pad=(1, 1))
+        c3 = Conv(f"{blk.name}.c3", 1, 1, width, cout, relu=False)
+        proj = (Conv(f"{blk.name}.proj", 1, 1, cin, cout, stride=st,
+                     relu=False)
+                if (cin != cout or blk.stride != 1) else None)
+        model.append(Bottleneck(blk.name, c1, c2, c3, proj))
+        cin = cout
+    model += [GlobalAvgPool(), FC("fc", cin, num_classes)]
+    return model
+
+
+BUILDERS = {
+    "alexnet": build_alexnet,
+    "vgg16": build_vgg16,
+    "resnet50": build_resnet50,
+}
+
+
+def build(name: str, *, num_classes: int = 1000, image_size: int = 0,
+          width_div: int = 1) -> List[Layer]:
+    if name not in BUILDERS:
+        raise ValueError(f"unknown vision model {name!r}; "
+                         f"have {sorted(BUILDERS)}")
+    default_size = 227 if name == "alexnet" else 224
+    return BUILDERS[name](num_classes=num_classes,
+                          image_size=image_size or default_size,
+                          width_div=width_div)

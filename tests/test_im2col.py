@@ -38,6 +38,61 @@ def test_conv_via_ffip_gemm():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("h,w,cin,cout,kh,kw,stride,pad,groups", [
+    (27, 27, 8, 16, 5, 5, 1, 2, 2),       # AlexNet conv2-style grouped
+    (13, 13, 12, 12, 3, 3, 1, 1, 4),
+    (10, 12, 6, 9, 3, 2, (2, 1), (0, 1), 3),  # asymmetric + grouped
+    (9, 9, 3, 4, 2, 2, (2, 2), (1, 1), 1),
+])
+def test_grouped_asymmetric_conv_via_gemm(h, w, cin, cout, kh, kw, stride,
+                                          pad, groups):
+    """Satellites: block-diagonal K split for groups and (sh, sw)/(ph, pw)
+    tuples, both validated against lax.conv feature_group_count."""
+    kx, kk = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (2, h, w, cin))
+    kernel = jax.random.normal(kk, (kh, kw, cin // groups, cout))
+    got = im2col.conv2d_via_gemm(x, kernel, stride=stride, pad=pad,
+                                 groups=groups)
+    sh, sw = im2col.as_pair(stride)
+    ph, pw = im2col.as_pair(pad)
+    want = jax.lax.conv_general_dilated(
+        x, kernel, (sh, sw), [(ph, ph), (pw, pw)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_gemm_indices_asymmetric_stride():
+    """The (sh, sw) counter walks rows with stride sh*W*Cin and columns with
+    sw*Cin — checked against an explicit nested loop."""
+    h, w, cin, kh, kw, sh, sw = 9, 11, 2, 3, 2, 2, 3
+    idx = im2col.conv_gemm_indices(h, w, cin, kh, kw, (sh, sw))
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    want = np.asarray([
+        [((r * sh + dkh) * w + (c * sw + dkw)) * cin + dc
+         for dkh in range(kh) for dkw in range(kw) for dc in range(cin)]
+        for r in range(oh) for c in range(ow)])
+    np.testing.assert_array_equal(idx, want)
+
+
+def test_conv_gemm_indices_group_offset():
+    """Group g's indices are group 0's shifted by g * Cin/groups — the
+    §5.1 counters realize grouping as one extra base address."""
+    idx0 = im2col.conv_gemm_indices(8, 8, 6, 3, 3, 1, groups=3, group=0)
+    idx2 = im2col.conv_gemm_indices(8, 8, 6, 3, 3, 1, groups=3, group=2)
+    np.testing.assert_array_equal(idx2, idx0 + 4)
+
+
+def test_conv2d_via_gemm_validates_groups():
+    x = jnp.zeros((1, 8, 8, 6))
+    kernel = jnp.zeros((3, 3, 2, 9))
+    with pytest.raises(ValueError):
+        im2col.conv2d_via_gemm(x, kernel, groups=2)   # cin/groups mismatch
+    with pytest.raises(ValueError):
+        im2col.conv2d_via_gemm(x, jnp.zeros((3, 3, 3, 9)), groups=2)  # cout%g
+
+
 def test_multi_digit_counter_matches_nested_loops():
     """The Fig.-5 counter reproduces Algorithm 1's nested-loop addresses."""
     digits = [im2col.Digit("kh", 3, 100), im2col.Digit("kw", 2, 10),

@@ -6,21 +6,34 @@ Runs the continuous batcher (float and int8-FFIP quantized modes) over a
 stream of mixed-length requests, sweeping the fused-decode ``decode_chunk``
 knob, and writes ``benchmarks/BENCH_serve.json``: tok/s, steps/s, the
 prefill / decode / host-overhead split from BatchServer.stats, per-step host
-transfer, and compile counts.
+transfer, TTFT, and compile counts.
 
 Jit warmup runs OUTSIDE the timed region (a covering workload — every prompt
 bucket plus a decode dispatch — compiles first; its wall time is reported
 separately as ``compile_s``), so the timed numbers are steady-state serving.
 The PR 2 hot path (host-side argmax over (B, V) logits, one dispatch per
 token, one prefill compile per prompt length, warmup inside the timed
-region) is kept in the file verbatim under ``baseline_pr2`` for trajectory
-comparison; ``comparison`` reports the decode speedup and the host-transfer
-reduction against it.
+region) is kept in the file verbatim under ``baseline_pr2``, and the
+contiguous-cache numbers measured immediately before the block-paged KV
+change live under ``baseline_prev`` — so the trajectory stays visible in one
+file; ``comparison`` reports the decode speedup and the host-transfer
+reduction against PR 2.
+
+The paged section (``results_paged``) runs the block-paged KV cache on a
+shared-prefix workload plus one long prompt, with chunked prefill, over a
+WARM prefix cache (the untimed warmup run registers the prefix pages), and
+records the paged-only metrics: pages_peak vs the contiguous-equivalent page
+count, resident prefix-cache pages after drain, prefix_hit_tokens,
+cow_copies, prefill_chunks, page-table upload bytes, and TTFT under the
+long-prefill + decode mix. ``comparison_paged`` re-runs the identical mix on
+the contiguous cache and reports the TTFT and footprint side by side (and
+asserts the paged gather outputs are byte-identical to contiguous).
 
 CAVEAT (same as gemm_micro): this container is CPU-only, so absolute timings
 measure the XLA-CPU + interpret-mode harness, not accelerator silicon — the
-load-bearing outputs are the phase RATIOS, the chunk-sweep trend, and the
-host-transfer reduction, which show what the fused hot path amortizes.
+load-bearing outputs are the phase RATIOS, the chunk-sweep trend, the
+host-transfer reduction, and the paged footprint/prefix-hit counters, which
+show what the fused hot path and the paged cache amortize.
 """
 from __future__ import annotations
 
@@ -53,6 +66,32 @@ BASELINE_PR2 = [
      "decode_ms_per_step": 313.59},
 ]
 
+# Contiguous-cache numbers measured in this container immediately before the
+# block-paged KV cache landed (same sweep, same workload/seed as below), so
+# the paged refactor's effect on the untouched contiguous hot path stays
+# auditable: the contiguous sweep in ``results`` should match these within
+# CPU noise.
+BASELINE_PREV = [
+    {"mode": "float", "decode_chunk": 1, "tok_per_s": 2061.37,
+     "steps_per_s": 993.5, "decode_ms_per_step": 1.01,
+     "host_bytes_per_step": 16.0},
+    {"mode": "float", "decode_chunk": 2, "tok_per_s": 2189.6,
+     "steps_per_s": 1065.69, "decode_ms_per_step": 0.94,
+     "host_bytes_per_step": 21.3},
+    {"mode": "float", "decode_chunk": 4, "tok_per_s": 2299.35,
+     "steps_per_s": 1485.75, "decode_ms_per_step": 0.67,
+     "host_bytes_per_step": 21.3},
+    {"mode": "float", "decode_chunk": 8, "tok_per_s": 2123.7,
+     "steps_per_s": 1113.79, "decode_ms_per_step": 0.9,
+     "host_bytes_per_step": 42.7},
+    {"mode": "int8-ffip", "decode_chunk": 1, "tok_per_s": 1217.39,
+     "steps_per_s": 674.91, "decode_ms_per_step": 1.48,
+     "host_bytes_per_step": 16.0},
+    {"mode": "int8-ffip", "decode_chunk": 4, "tok_per_s": 1316.58,
+     "steps_per_s": 1047.88, "decode_ms_per_step": 0.95,
+     "host_bytes_per_step": 21.3},
+]
+
 
 def _requests(cfg, requests: int, max_new: int, seed: int):
     rng = np.random.default_rng(seed)
@@ -61,21 +100,55 @@ def _requests(cfg, requests: int, max_new: int, seed: int):
                     max_new_tokens=max_new) for i, l in enumerate(lens)]
 
 
+def _mix_requests(cfg, requests: int, max_new: int, seed: int, *,
+                  long_len: int):
+    """Shared-prefix workload + one long prompt: half the requests carry a
+    common 16-token prefix (page reuse), the final request is a long prompt
+    whose chunked prefill must interleave with the others' decode."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(3, 12, requests)
+    base = rng.integers(0, cfg.vocab, size=(16,))
+    reqs = []
+    for i, l in enumerate(lens):
+        p = rng.integers(0, cfg.vocab, size=(int(l),))
+        if i % 2 == 0:
+            p = np.concatenate([base, p])
+        reqs.append(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    reqs.append(Request(rid=requests,
+                        prompt=rng.integers(0, cfg.vocab, size=(long_len,)),
+                        max_new_tokens=max_new))
+    return reqs
+
+
 def bench(arch: str, *, slots: int, requests: int, max_new: int,
           max_len: int, quantized: bool, decode_chunk: int,
-          gemm_impl=None, gemm_block=None, seed: int = 0) -> dict:
+          gemm_impl=None, gemm_block=None, seed: int = 0,
+          paged: bool = False, page_size: int = 16, prefill_chunk=None,
+          paged_attention: str = "gather", mix_long_len: int = 0) -> dict:
     cfg = configs.smoke_config(configs.get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     srv = BatchServer(model, batch_slots=slots, max_len=max_len,
                       quantized=quantized, decode_chunk=decode_chunk,
-                      gemm_impl=gemm_impl, gemm_block=gemm_block)
+                      gemm_impl=gemm_impl, gemm_block=gemm_block,
+                      paged=paged, page_size=page_size,
+                      prefill_chunk=prefill_chunk,
+                      paged_attention=paged_attention)
+
+    def _workload(budget, s):
+        if mix_long_len:
+            return _mix_requests(cfg, requests, budget, s,
+                                 long_len=mix_long_len)
+        return _requests(cfg, requests, budget, s)
 
     # --- warmup (untimed region): compile every prompt bucket + the decode
     # program, using the same length distribution as the measured workload.
     # Budget 2: the minimum that reaches a decode dispatch (token 1 comes
-    # from prefill), keeping warmup cheap regardless of --max-new.
-    warm = _requests(cfg, requests, 2, seed)
+    # from prefill), keeping warmup cheap regardless of --max-new. In paged
+    # mode this also REGISTERS the prompts' prefix pages, so the timed run
+    # measures serving over a warm prefix cache (prefill collapses to the
+    # recompute-last-token chunk).
+    warm = _workload(2, seed)
     t0 = time.perf_counter()
     for r in warm:
         srv.submit(r)
@@ -83,25 +156,27 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
     compile_s = time.perf_counter() - t0
 
     # --- timed steady-state run
-    reqs = _requests(cfg, requests, max_new, seed)
+    reqs = _workload(max_new, seed)
+    n_reqs = len(reqs)
     t0 = time.perf_counter()
     for r in reqs:
         srv.submit(r)
     done = srv.run_until_drained(params)
     wall = time.perf_counter() - t0
-    assert len(done) == requests, "serve_bench: requests dropped"
+    assert len(done) == n_reqs, "serve_bench: requests dropped"
 
     total = sum(len(r.out_tokens) for r in done)
+    ttft = [r.t_first - r.t_submit for r in done]
     st = srv.stats
     steps = st["steps"]
-    return {
+    out = {
         "arch": cfg.name,
         "mode": "int8-ffip" if quantized else "float",
         "gemm": {"impl": gemm_impl or "xla",
                  "block": list(gemm_block) if isinstance(gemm_block, tuple)
                  else gemm_block},
         "slots": slots,
-        "requests": requests,
+        "requests": n_reqs,
         "decode_chunk": decode_chunk,
         "completed": len(done),
         "tokens_out": total,
@@ -120,11 +195,36 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
         "prefill_dispatches": st["prefill_dispatches"],
         "decode_tokens": st["decode_tokens"],
         "decode_ms_per_step": round(1e3 * st["decode_s"] / max(steps, 1), 2),
+        # queue wait + prefill until the first token, per request
+        "ttft_ms": {"mean": round(1e3 * sum(ttft) / len(ttft), 2),
+                    "max": round(1e3 * max(ttft), 2)},
         # on-device sampling: ids, not logits, cross per decode step
         "host_bytes_per_step": round(st["host_bytes_decode"] / max(steps, 1), 1),
         "host_bytes_per_step_pr2": slots * cfg.vocab * 4,   # (B, V) f32 logits
         "compiles": dict(srv.compiles),
     }
+    if paged:
+        assert srv._reserved == 0, "page reservation ledger did not drain"
+        assert (srv.alloc.free_count + srv.alloc.in_use
+                == srv.alloc.num_pages), "page allocator leaked"
+        out["tokens_by_rid"] = {r.rid: list(r.out_tokens) for r in done}
+        out["paged"] = {
+            "attention": paged_attention,
+            "page_size": page_size,
+            "num_pages": srv.alloc.num_pages,
+            "prefill_chunk": srv.prefill_chunk,
+            "pages_peak": st["pages_peak"],
+            "contiguous_equiv_pages": slots * (max_len // page_size),
+            # pages still held by the prefix index after drain (warm cache)
+            "prefix_cache_pages_resident": srv.alloc.in_use,
+            "prefix_hit_tokens": st["prefix_hit_tokens"],
+            "cow_copies": st["cow_copies"],
+            "prefill_chunks": st["prefill_chunks"],
+            "host_bytes_page_tables": st["host_bytes_page_tables"],
+        }
+    elif mix_long_len:
+        out["tokens_by_rid"] = {r.rid: list(r.out_tokens) for r in done}
+    return out
 
 
 def main():
@@ -143,6 +243,13 @@ def main():
     ap.add_argument("--gemm-block", default=None,
                     help="'auto' = repro.tune schedule cache (tunes flash "
                          "attention blocks too) or explicit 'bm,bn,bk' (needs --gemm-impl pallas)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="paged-section prefill chunk (page-aligned)")
+    ap.add_argument("--long-len", type=int, default=48,
+                    help="long-prompt length in the paged TTFT mix")
+    ap.add_argument("--skip-paged", action="store_true",
+                    help="contiguous sweep only")
     args = ap.parse_args()
     gemm_block = args.gemm_block
     if gemm_block and gemm_block != "auto":
@@ -158,8 +265,8 @@ def main():
                 quantized=quantized, decode_chunk=chunk,
                 gemm_impl=args.gemm_impl, gemm_block=gemm_block))
 
-    def _best(mode):
-        return max((r for r in results if r["mode"] == mode),
+    def _best(rs, mode):
+        return max((r for r in rs if r["mode"] == mode),
                    key=lambda r: r["steps_per_s"])
 
     # the PR2 baseline was measured on one specific workload; only claim a
@@ -169,7 +276,7 @@ def main():
                   and args.requests == 6 and args.max_new == 4)
     comparison = {}
     for base in BASELINE_PR2 if comparable else []:
-        new = _best(base["mode"])
+        new = _best(results, base["mode"])
         comparison[base["mode"]] = {
             "decode_ms_per_step": {"pr2": base["decode_ms_per_step"],
                                    "now": new["decode_ms_per_step"],
@@ -181,15 +288,60 @@ def main():
                                     "now": new["host_bytes_per_step"]},
         }
 
+    # --- paged section: shared-prefix + one long prompt, chunked prefill,
+    # gather attention (bit-identical math to the contiguous oracle), plus
+    # the SAME mix run contiguously so TTFT/footprint sit side by side.
+    results_paged, comparison_paged = [], {}
+    if not args.skip_paged:
+        mix = dict(slots=args.slots, requests=args.requests,
+                   max_new=args.max_new, max_len=args.max_len,
+                   gemm_impl=args.gemm_impl, gemm_block=gemm_block,
+                   mix_long_len=args.long_len)
+        for quantized, chunks in ((False, (1, 4)), (True, (4,))):
+            for chunk in chunks:
+                results_paged.append(bench(
+                    args.arch, quantized=quantized, decode_chunk=chunk,
+                    paged=True, page_size=args.page_size,
+                    prefill_chunk=args.prefill_chunk, **mix))
+        ref = bench(args.arch, quantized=False, decode_chunk=4, **mix)
+        pg = next(r for r in results_paged
+                  if r["mode"] == "float" and r["decode_chunk"] == 4)
+        assert pg.pop("tokens_by_rid") == ref.pop("tokens_by_rid"), \
+            "paged gather outputs diverge from contiguous on the mix workload"
+        for r in results_paged:
+            r.pop("tokens_by_rid", None)
+        comparison_paged = {
+            "workload": (f"{args.requests} shared-prefix requests + one "
+                         f"{args.long_len}-token prompt, prefill_chunk="
+                         f"{args.prefill_chunk} (chunks interleave with "
+                         "decode), warm prefix cache, outputs byte-identical"),
+            "ttft_ms": {"contiguous": ref["ttft_ms"],
+                        "paged_chunked": pg["ttft_ms"]},
+            "prefill_tokens": {"contiguous": ref["prefill_tokens"],
+                               "paged_warm_prefix": pg["prefill_tokens"]},
+            "pages_peak": pg["paged"]["pages_peak"],
+            "contiguous_equiv_pages": pg["paged"]["contiguous_equiv_pages"],
+            "prefix_hit_tokens": pg["paged"]["prefix_hit_tokens"],
+        }
+
     out = {
         "bench": "serve",
         "note": ("CPU-only container: interpret-mode timings; ratios, the "
                  "chunk sweep, and the host-transfer reduction are the "
                  "load-bearing numbers. compile_s is jit warmup, excluded "
-                 "from wall_s (baseline_pr2 wall_s includes it)."),
+                 "from wall_s (baseline_pr2 wall_s includes it). "
+                 "baseline_prev = contiguous numbers from just before the "
+                 "block-paged KV cache landed. Paged rows time the GATHER "
+                 "oracle + per-chunk host dispatch on CPU (worst case for "
+                 "paging); the load-bearing paged outputs are the footprint "
+                 "(pages_peak vs contiguous_equiv_pages) and the "
+                 "prefix-hit / prefill-token collapse, not tok/s."),
         "baseline_pr2": BASELINE_PR2,
+        "baseline_prev": BASELINE_PREV,
         "comparison": comparison,
+        "comparison_paged": comparison_paged,
         "results": results,
+        "results_paged": results_paged,
     }
     OUT.write_text(json.dumps(out, indent=2) + "\n")
     for r in results:
@@ -198,12 +350,28 @@ def main():
               f"decode={r['phase_s']['decode']}s,"
               f"compile={r['compile_s']}s,"
               f"host_B/step={r['host_bytes_per_step']}")
+    for r in results_paged:
+        p = r["paged"]
+        print(f"serve_bench.{r['arch']}.{r['mode']}.paged-chunk"
+              f"{r['decode_chunk']},{r['tok_per_s']} tok/s,"
+              f"ttft_mean={r['ttft_ms']['mean']}ms,"
+              f"pages_peak={p['pages_peak']}/{p['contiguous_equiv_pages']},"
+              f"prefix_hit={p['prefix_hit_tokens']} tok,"
+              f"cow={p['cow_copies']},chunks={p['prefill_chunks']}")
     for mode, c in comparison.items():
         print(f"vs PR2 [{mode}]: decode {c['decode_ms_per_step']['pr2']}ms -> "
               f"{c['decode_ms_per_step']['now']}ms/step "
               f"({c['decode_speedup']}x), host bytes/step "
               f"{c['host_bytes_per_step']['pr2']} -> "
               f"{c['host_bytes_per_step']['now']}")
+    if comparison_paged:
+        c = comparison_paged
+        print(f"paged mix: ttft mean {c['ttft_ms']['contiguous']['mean']}ms "
+              f"(contiguous) vs {c['ttft_ms']['paged_chunked']['mean']}ms "
+              f"(paged+chunked, warm prefix), prefill tokens "
+              f"{c['prefill_tokens']['contiguous']} -> "
+              f"{c['prefill_tokens']['paged_warm_prefix']}, pages_peak "
+              f"{c['pages_peak']}/{c['contiguous_equiv_pages']}")
     print(f"wrote {OUT}")
 
 

@@ -54,7 +54,11 @@ def _fwd_kernel(w_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
 
     m_prev = m_scr[...]                            # (bq, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)                         # (bq, bk)
+    # Zero p where masked: for a fully-masked block m_new stays NEG_INF and
+    # exp(s - m_new) = exp(0) = 1 per entry, which would pollute l/acc with
+    # bk phantom counts (and only self-correct if a LATER block has a valid
+    # entry). Paged/chunked-prefill masks hit that case directly.
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (bq, bk)
     alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
     l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
     acc = acc_scr[...] * alpha + jax.lax.dot_general(
@@ -271,3 +275,120 @@ def _fa_bwd(causal, interpret, bq, bk, res, do):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# -- paged decode attention ---------------------------------------------------
+
+def _paged_fwd_kernel(pt_ref, len_ref, qs_ref, w_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_scr, l_scr, acc_scr, *, scale, sq, ps, causal):
+    """One (b, h, page) step of the online softmax over paged k/v.
+
+    k_ref/v_ref already hold the POOL page selected by the scalar-prefetch
+    index map (page_table[b, j]); this body only has to mask by true length
+    and fold the page into the running (m, l, acc) stats."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                # (sq, d)
+    k = k_ref[0, :, 0, :]                          # (ps, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qs_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (sq, ps), 0)
+    k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (sq, ps), 1)
+    mask = k_pos < len_ref[b]
+    if causal:
+        mask = jnp.logical_and(mask, q_pos >= k_pos)
+    w = w_ref[0]
+    mask = jnp.logical_and(mask, jnp.logical_or(w <= 0, q_pos - k_pos < w))
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (sq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (sq, ps)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _fin():
+        # Rows with zero valid keys keep l == 0 -> output exactly 0 (not the
+        # mean of garbage v rows; see the masked-p note in _fwd_kernel).
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "causal", "interpret"))
+def flash_attention_paged(q: Array, k_pool: Array, v_pool: Array,
+                          page_table: Array, lengths: Array, q_start: Array,
+                          window=0, *, scale: Optional[float] = None,
+                          causal: bool = True, interpret=None) -> Array:
+    """Decode-side paged attention: k/v live in a page pool and are gathered
+    through the page table INSIDE the kernel (scalar-prefetch index maps pick
+    the pool page per grid step — no materialized contiguous copy).
+
+    q:          (B, H, Sq, d)   — Sq is the decode chunk (1 for single-step)
+    k_pool:     (P, ps, KV, d)  — KV kv-heads, q-head h uses kv-head h*KV//H
+    v_pool:     (P, ps, KV, dv) — dv may differ from d (absorbed MLA)
+    page_table: (B, max_pages) int32 pool page ids (unallocated entries may
+                be anything in range; they are masked by ``lengths``)
+    lengths:    (B,) int32 — number of valid cache rows (keys) per sequence
+    q_start:    (B,) int32 — absolute position of q row 0
+    window:     () int32 (traced OK; <=0 = full attention)
+    scale:      score scale; default 1/sqrt(d) (absorbed MLA passes the
+                1/sqrt(nope+rope) of the pre-absorption head dim)
+    -> (B, H, Sq, dv). Query rows with zero valid keys return exactly 0.
+    """
+    interpret = resolve_interpret(interpret)
+    b, h, sq, d = q.shape
+    n_pages, ps, kv, _ = k_pool.shape
+    dv = v_pool.shape[-1]
+    max_pages = page_table.shape[1]
+    group = max(h // kv, 1)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    pt = jnp.asarray(page_table, jnp.int32)
+    ln = jnp.asarray(lengths, jnp.int32).reshape(b)
+    qs = jnp.asarray(q_start, jnp.int32).reshape(b)
+    w = jnp.asarray(window, jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, h, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, sq, d),
+                         lambda bi, hi, j, pt, ln, qs, w: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, hi, j, pt, ln, qs, w:
+                         (pt[bi, j], 0, hi // group, 0)),
+            pl.BlockSpec((1, ps, 1, dv),
+                         lambda bi, hi, j, pt, ln, qs, w:
+                         (pt[bi, j], 0, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, sq, dv), lambda bi, hi, j, pt, ln, qs, w: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_fwd_kernel, scale=scale, sq=sq, ps=ps,
+                          causal=causal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dv), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt, ln, qs, w, q, k_pool, v_pool)

@@ -11,8 +11,15 @@ default (``--no-prefill-buckets`` forces the per-slot fallback).
 ``--gemm-impl pallas`` routes the serving projections through the Pallas
 kernels and ``--gemm-block auto`` resolves their block shapes (plus flash
 attention's) from the ``repro.tune`` schedule cache — pre-populate it with
-``python -m repro.launch.tune``. Exits non-zero if any request is dropped or
-over/under-generates, so this doubles as the CI batcher-regression smoke.
+``python -m repro.launch.tune``.
+
+``--paged`` switches to the block-paged KV cache (page pool + per-slot page
+tables, refcounted prefix sharing, chunked prefill); ``--shared-prefix``
+makes the synthetic workload share a long prompt prefix so page reuse has
+something to bite on, and ``--compare-contiguous`` re-runs the identical
+workload on the contiguous cache and asserts BYTE-IDENTICAL outputs plus a
+paged-footprint win. Exits non-zero if any request is dropped or over/under-
+generates, so this doubles as the CI batcher-regression smoke.
 """
 from __future__ import annotations
 
@@ -25,6 +32,42 @@ import numpy as np
 from repro import configs
 from repro.models.model import build_model
 from repro.serve.batcher import BatchServer, Request
+
+
+def _make_prompts(cfg, n_requests, shared_prefix, rng):
+    lens = rng.integers(3, 12, n_requests)
+    if not shared_prefix:
+        return [rng.integers(0, cfg.vocab, size=(int(lens[i]),))
+                for i in range(n_requests)]
+    # half the requests carry a common 16-token prefix; one is an exact
+    # duplicate of another (whole-prompt hit including the partial tail page)
+    base = rng.integers(0, cfg.vocab, size=(16,))
+    prompts = []
+    for i in range(n_requests):
+        if i % 2 == 0:
+            tail = rng.integers(0, cfg.vocab, size=(int(lens[i]),))
+            prompts.append(np.concatenate([base, tail]))
+        else:
+            prompts.append(rng.integers(0, cfg.vocab, size=(int(lens[i]),)))
+    if n_requests >= 3:
+        prompts[-1] = prompts[0].copy()
+    return prompts
+
+
+def _serve(model, params, prompts, max_new, args, *, paged):
+    srv = BatchServer(
+        model, batch_slots=args.slots, max_len=args.max_len,
+        quantized=args.quantized, decode_chunk=args.decode_chunk,
+        gemm_impl=args.gemm_impl, gemm_block=args.gemm_block_parsed,
+        prefill_buckets=not args.no_prefill_buckets, paged=paged,
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefill_chunk=args.prefill_chunk,
+        paged_attention=args.paged_attention)
+    t0 = time.perf_counter()
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = srv.run_until_drained(params)
+    return srv, done, time.perf_counter() - t0
 
 
 def main():
@@ -47,33 +90,46 @@ def main():
     ap.add_argument("--gemm-block", default=None,
                     help="'auto' (repro.tune schedule cache; also tunes flash "
                          "attention blocks) or explicit 'bm,bn,bk' (needs --gemm-impl pallas)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache (page pool + page tables, "
+                         "prefix sharing, chunked prefill)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size; default slots * max_len / page_size")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="page-aligned prefill chunk width; default max_len "
+                         "(one chunk per prompt)")
+    ap.add_argument("--paged-attention", choices=["gather", "flash"],
+                    default="gather",
+                    help="gather = contiguous-view oracle math (bit-identical "
+                         "to --no --paged); flash = paged Pallas kernel")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="workload shares a 16-token prefix across half the "
+                         "requests + one exact duplicate prompt")
+    ap.add_argument("--compare-contiguous", action="store_true",
+                    help="also run the contiguous cache on the same workload "
+                         "and assert byte-identical outputs (needs --paged)")
     args = ap.parse_args()
-    gemm_block = args.gemm_block
-    if gemm_block and gemm_block != "auto":
-        gemm_block = tuple(int(x) for x in gemm_block.split(","))
+    args.gemm_block_parsed = args.gemm_block
+    if args.gemm_block and args.gemm_block != "auto":
+        args.gemm_block_parsed = tuple(
+            int(x) for x in args.gemm_block.split(","))
 
     cfg = configs.get_config(args.arch)
     if args.smoke:
         cfg = configs.smoke_config(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    srv = BatchServer(model, batch_slots=args.slots, max_len=args.max_len,
-                      quantized=args.quantized, decode_chunk=args.decode_chunk,
-                      gemm_impl=args.gemm_impl, gemm_block=gemm_block,
-                      prefill_buckets=not args.no_prefill_buckets)
 
     rng = np.random.default_rng(0)
-    lens = rng.integers(3, 12, args.requests)
-    t0 = time.perf_counter()
-    for i in range(args.requests):
-        srv.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab, size=(int(lens[i]),)),
-            max_new_tokens=args.max_new))
-    done = srv.run_until_drained(params)
-    dt = time.perf_counter() - t0
+    prompts = _make_prompts(cfg, args.requests, args.shared_prefix, rng)
+    srv, done, dt = _serve(model, params, prompts, args.max_new, args,
+                           paged=args.paged)
 
     total = sum(len(r.out_tokens) for r in done)
     mode = "int8-ffip" if args.quantized else "float"
+    if args.paged:
+        mode += f"/paged-{args.paged_attention}"
     st = srv.stats
     print(f"[{mode}] {len(done)}/{args.requests} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s host-side, "
@@ -88,6 +144,14 @@ def main():
           f"host transfer {st['host_bytes_prefill'] + st['host_bytes_decode']}"
           f" B total "
           f"(sampling on device: ids only, never (B, V) logits)")
+    if args.paged:
+        cap = srv.b * srv.max_pages
+        print(f"  paged: pages_peak={st['pages_peak']}/{srv.alloc.num_pages} "
+              f"(contiguous equivalent {cap}), "
+              f"prefix_hit_tokens={st['prefix_hit_tokens']}, "
+              f"cow_copies={st['cow_copies']}, "
+              f"prefill_chunks={st['prefill_chunks']}, "
+              f"page-table upload {st['host_bytes_page_tables']} B")
     if args.gemm_block == "auto":
         from repro import tune
         print(f"  tune: {tune.stats['hits']} schedule hits / "
@@ -101,6 +165,23 @@ def main():
         assert len(r.out_tokens) == r.max_new_tokens, \
             (r.rid, len(r.out_tokens), r.max_new_tokens)
         assert all(0 <= t < cfg.vocab for t in r.out_tokens), r.rid
+    if args.paged:
+        assert srv._reserved == 0, "page reservation ledger did not drain"
+        assert (srv.alloc.free_count + srv.alloc.in_use
+                == srv.alloc.num_pages), "page allocator leaked"
+        if args.shared_prefix:
+            assert st["prefix_hit_tokens"] > 0, "no prefix reuse observed"
+            assert st["pages_peak"] < srv.b * srv.max_pages, \
+                "paged footprint should beat slots x max_len under sharing"
+    if args.compare_contiguous:
+        if not args.paged:
+            raise SystemExit("--compare-contiguous requires --paged")
+        ref_srv, ref_done, _ = _serve(model, params, prompts, args.max_new,
+                                      args, paged=False)
+        got = {r.rid: r.out_tokens for r in done}
+        want = {r.rid: r.out_tokens for r in ref_done}
+        assert got == want, "paged outputs diverge from contiguous oracle"
+        print(f"  compare-contiguous: {total} tokens byte-identical")
     print("OK")
 
 

@@ -70,6 +70,54 @@ def _cache_write(buf: Array, new: Array, cache_pos,
     return jax.vmap(one)(buf, new, pos)
 
 
+def _paged_write(pool: Array, new: Array, page_table: Array, cache_pos,
+                 write_mask: Optional[Array] = None) -> Array:
+    """Scatter ``new`` (B, s, ...) token rows into the page ``pool``
+    (P, ps, ...) at logical positions ``cache_pos`` via the page table.
+
+    ``page_table`` is (B, max_pages) int32 pool page ids; token ``t`` of
+    sequence ``b`` lands in pool row ``page_table[b, t // ps] * ps + t % ps``.
+    ``cache_pos``: scalar or (B,) first logical position of ``new``.
+    ``write_mask``: None, (B,) or (B, s) bool — False rows are DROPPED (their
+    scatter index is pushed out of range and ``mode="drop"`` discards it), so
+    frozen/inactive slots never touch the shared pool. Rows whose logical
+    position falls beyond the page table are likewise dropped.
+    """
+    new = new.astype(pool.dtype)
+    n_pages, ps = pool.shape[:2]
+    b, s = new.shape[:2]
+    max_pages = page_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,))
+    r = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]      # (B, s)
+    page = jnp.take_along_axis(page_table.astype(jnp.int32),
+                               jnp.minimum(r // ps, max_pages - 1), axis=1)
+    rows = page * ps + r % ps
+    rows = jnp.where(r // ps < max_pages, rows, n_pages * ps)
+    if write_mask is not None:
+        wm = write_mask if write_mask.ndim == 2 else write_mask[:, None]
+        rows = jnp.where(wm, rows, n_pages * ps)
+    flat = pool.reshape((n_pages * ps,) + pool.shape[2:])
+    flat = flat.at[rows.reshape(-1)].set(
+        new.reshape((b * s,) + new.shape[2:]), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def _paged_view(pool: Array, page_table: Array) -> Array:
+    """Gather pool pages into a (B, max_pages*ps, ...) contiguous view.
+
+    With ``max_pages * ps == max_len`` the view has the contiguous cache's
+    exact shape, so the downstream score/softmax/context math (and therefore
+    the sampled tokens) is bit-identical to the contiguous-slot path —
+    garbage in unallocated pages is masked by the caller's validity mask.
+    """
+    n_pages, ps = pool.shape[:2]
+    b, max_pages = page_table.shape
+    flat = pool.reshape((n_pages * ps,) + pool.shape[2:])
+    rows = (page_table.astype(jnp.int32)[:, :, None] * ps
+            + jnp.arange(ps, dtype=jnp.int32)[None, None, :])
+    return flat[rows.reshape(b, max_pages * ps)]
+
+
 def _cache_end(cache_pos, s: int) -> Array:
     """Exclusive end of valid cache rows per batch entry: (1, 1) for a shared
     scalar position, (B, 1) for per-slot positions — broadcasts against a
@@ -172,13 +220,22 @@ def gqa_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
               window=0, rope_theta=None, causal: bool = True,
               cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
               cache_write_mask: Optional[Array] = None,
-              prefill: bool = False) -> Tuple[Array, Optional[dict]]:
+              prefill: bool = False, page_table: Optional[Array] = None,
+              paged_impl: str = "gather") -> Tuple[Array, Optional[dict]]:
     """Full/prefill when cache is None; single-step decode when cache given.
 
     cache = {"k": (B, S_max, KV, hd), "v": ...}; cache_pos: scalar int32 —
     the number of tokens already in the cache (q is written at that offset).
     cache_write_mask: optional (B,) bool — rows with False keep their cached
     K/V (bucketed prefill into a shared slot cache).
+
+    When ``page_table`` (B, max_pages) is given the cache leaves are page
+    POOLS (P, ps, KV, hd) shared across sequences; k/v rows scatter through
+    the table and attention runs either over the gathered contiguous view
+    (``paged_impl="gather"`` — bit-identical to the contiguous decode branch)
+    or the in-kernel-gather Pallas path (``paged_impl="flash"``). The paged
+    branch serves both decode and chunked prefill (chunk rows attend the
+    full gathered cache, so chunk boundaries never change the math).
     """
     b, s, d = x.shape
     hd = cfg.hd
@@ -200,6 +257,32 @@ def gqa_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
                 keep = keep[None]
             out = _sdpa(q, k, v, keep)
         new_cache = None
+    elif page_table is not None:
+        k_pool = _paged_write(cache["k"], k, page_table, cache_pos,
+                              cache_write_mask)
+        v_pool = _paged_write(cache["v"], v, page_table, cache_pos,
+                              cache_write_mask)
+        pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32).reshape(-1),
+                               (b,))
+        if paged_impl == "flash":
+            from repro.core.gemm import current_config
+            from repro.kernels.flash_attention import flash_attention_paged
+            out = flash_attention_paged(
+                q.transpose(0, 2, 1, 3), k_pool, v_pool, page_table,
+                pos + s, pos, window if window is not None else 0,
+                causal=causal, interpret=current_config().interpret)
+            out = out.transpose(0, 2, 1, 3)
+        else:
+            kg = _paged_view(k_pool, page_table)
+            vg = _paged_view(v_pool, page_table)
+            s_max = kg.shape[1]
+            k_pos = jnp.arange(s_max, dtype=jnp.int32)
+            valid = k_pos[None, :] < _cache_end(pos, s)
+            q_pos = positions if positions.ndim == 2 else positions[None, :]
+            keep = _mask(q_pos, k_pos[None, :], window, causal) \
+                & valid[:, None, :]
+            out = _sdpa(q, kg, vg, keep)
+        new_cache = {"k": k_pool, "v": v_pool}
     elif prefill and cfg.attention_impl == "flash":
         # prefill into EMPTY cache rows: attention over the prompt == flash
         # self-attention; k/v written at offset 0 (32k cells never touch an
@@ -252,11 +335,16 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
               window=0, cache: Optional[dict] = None,
               cache_pos: Optional[Array] = None,
               cache_write_mask: Optional[Array] = None,
-              prefill: bool = False) -> Tuple[Array, Optional[dict]]:
+              prefill: bool = False, page_table: Optional[Array] = None,
+              paged_impl: str = "gather") -> Tuple[Array, Optional[dict]]:
     """MLA: the KV cache stores only (c_kv, k_rope) — rank-512+64 per token.
 
     cache = {"c_kv": (B, S_max, r), "k_rope": (B, S_max, rope_hd)};
-    cache_write_mask as in :func:`gqa_apply`.
+    cache_write_mask as in :func:`gqa_apply`. With ``page_table`` set the
+    leaves are pools (P, ps, r) / (P, ps, rope_hd) and the absorbed decode
+    runs over the gathered view (or, for ``paged_impl="flash"``, the paged
+    kernel with k = concat(c, rope), v = c and the pre-absorption scale —
+    the flashinfer paged-MLA layout).
     """
     m = cfg.mla
     b, s, d = x.shape
@@ -268,7 +356,8 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
     k_rope = L.apply_rope(L.dense(x, p["w_kr"])[:, :, None, :], positions,
                           cfg.rope_theta)  # (B,S,1,rope_hd)
 
-    if cache is None or (prefill and cfg.attention_impl == "flash"):
+    if page_table is None and (cache is None
+                               or (prefill and cfg.attention_impl == "flash")):
         k_nope, v = _mla_kv(p, c_kv, cfg)
         kr = k_rope
         kv_positions = positions if positions.ndim == 2 else positions[None, :]
@@ -299,15 +388,43 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         # ratio 0.00 in the baseline roofline), absorb W_uk into the query
         # and W_uv into the context: attention runs entirely in the rank-r
         # latent space against the compressed cache.
-        c_cache = _cache_write(cache["c_kv"], c_kv, cache_pos, cache_write_mask)
-        r_cache = _cache_write(cache["k_rope"], k_rope[:, :, 0, :], cache_pos,
-                               cache_write_mask)
-        s_max = c_cache.shape[1]
         w_ukv = p["w_ukv"]["w"].reshape(m.kv_lora_rank, h,
                                         m.nope_head_dim + m.v_head_dim)
         w_uk = w_ukv[..., :m.nope_head_dim]            # (r, H, nope)
         w_uv = w_ukv[..., m.nope_head_dim:]            # (r, H, v)
         q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)   # absorbed query
+        if page_table is not None:
+            c_pool = _paged_write(cache["c_kv"], c_kv, page_table, cache_pos,
+                                  cache_write_mask)
+            r_pool = _paged_write(cache["k_rope"], k_rope[:, :, 0, :],
+                                  page_table, cache_pos, cache_write_mask)
+            new_cache = {"c_kv": c_pool, "k_rope": r_pool}
+            pos = jnp.broadcast_to(
+                jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,))
+            if paged_impl == "flash":
+                from repro.core.gemm import current_config
+                from repro.kernels.flash_attention import flash_attention_paged
+                q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)
+                k_cat = jnp.concatenate([c_pool, r_pool], -1)[:, :, None, :]
+                ctx = flash_attention_paged(
+                    q_cat.transpose(0, 2, 1, 3), k_cat,
+                    c_pool[:, :, None, :], page_table, pos + s, pos, 0,
+                    scale=1.0 / ((m.nope_head_dim + m.rope_head_dim) ** 0.5),
+                    interpret=current_config().interpret)
+                ctx = ctx.transpose(0, 2, 1, 3)        # (B, s, H, r)
+                out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)
+                out = out.reshape(b, s, h * m.v_head_dim)
+                return L.dense(out, p["wo"]), new_cache
+            c_cache = _paged_view(c_pool, page_table)
+            r_cache = _paged_view(r_pool, page_table)
+            cache_pos = pos
+        else:
+            c_cache = _cache_write(cache["c_kv"], c_kv, cache_pos,
+                                   cache_write_mask)
+            r_cache = _cache_write(cache["k_rope"], k_rope[:, :, 0, :],
+                                   cache_pos, cache_write_mask)
+            new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+        s_max = c_cache.shape[1]
         scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(jnp.float32),
                              c_cache.astype(jnp.float32))
                   + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
@@ -323,7 +440,6 @@ def mla_apply(p: dict, x: Array, *, cfg: ModelConfig, positions: Array,
         ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(c_cache.dtype), c_cache)
         out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)   # absorbed values
         out = out.reshape(b, s, h * m.v_head_dim)
-        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
         return L.dense(out, p["wo"]), new_cache
 
     scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,

@@ -62,6 +62,12 @@ class Model:
             }
         return cache
 
+    def init_paged_cache(self, num_pages: int, page_size: int) -> dict:
+        """Shared page pools instead of per-slot rows; see
+        transformer.init_paged_cache. Sequences address the pools through a
+        (B, max_pages) page table owned by the serving layer."""
+        return T.init_paged_cache(self.cfg, num_pages, page_size)
+
     # -- training ----------------------------------------------------------
     def loss(self, params, batch: Dict[str, Array]) -> Array:
         """batch: tokens (B,S), labels (B,S), + frames/patches stubs."""
@@ -95,17 +101,25 @@ class Model:
         return new_cache, logits[:, 0]
 
     def sample_step(self, params, token: Array, cache: dict, pos: Array,
-                    ) -> Tuple[dict, Array]:
+                    *, page_table: Optional[Array] = None,
+                    paged_impl: str = "gather",
+                    write_mask: Optional[Array] = None) -> Tuple[dict, Array]:
         """decode_step with greedy sampling fused into the device program:
         returns (cache, (B,) int32 token ids) — the (B, V) float logits never
-        leave the device."""
+        leave the device. With ``page_table`` the cache leaves are page pools
+        and ``write_mask`` (B,) gates pool writes (a masked-out slot must not
+        touch SHARED pool rows, unlike the harmless private-row rewrite of
+        the contiguous path)."""
         hidden, _, new_cache = T.forward(
-            params, token, self.cfg, caches=cache, cache_pos=pos)
+            params, token, self.cfg, caches=cache, cache_pos=pos,
+            cache_write_mask=write_mask, page_table=page_table,
+            paged_impl=paged_impl)
         return new_cache, T.sample_fn(params, hidden, self.cfg)[:, 0]
 
     def sample_steps(self, params, token: Array, cache: dict, pos: Array,
                      live: Array, remaining: Array, eos_id: Array,
-                     *, steps: int) -> Tuple[dict, Array]:
+                     *, steps: int, page_table: Optional[Array] = None,
+                     paged_impl: str = "gather") -> Tuple[dict, Array]:
         """Fused multi-step greedy decode: a ``lax.scan`` over ``steps`` decode
         steps that feeds each sampled token straight back on device — one host
         round-trip (and one (steps, B) int32 transfer) per ``steps`` tokens.
@@ -122,7 +136,10 @@ class Model:
         """
         def body(carry, _):
             cache, tok, pos, live, rem = carry
-            cache, nxt = self.sample_step(params, tok[:, None], cache, pos)
+            cache, nxt = self.sample_step(
+                params, tok[:, None], cache, pos, page_table=page_table,
+                paged_impl=paged_impl,
+                write_mask=(live if page_table is not None else None))
             rem = jnp.where(live, rem - 1, rem)
             finished = live & ((nxt == eos_id) | (rem <= 0))
             live2 = live & ~finished
@@ -154,6 +171,39 @@ class Model:
             cache_write_mask=slot_mask, is_prefill=True)
         last = hidden[jnp.arange(b), lengths - 1]          # (B, d)
         return new_cache, T.sample_fn(params, last[:, None], self.cfg)[:, 0]
+
+    def prefill_chunk_paged(self, params, tokens: Array, cache: dict,
+                            page_table: Array, offset: Array, valid_len: Array,
+                            write_start: Array, *, paged_impl: str = "gather",
+                            ) -> Tuple[dict, Array]:
+        """One page-aligned prefill chunk of a single sequence into the pools.
+
+        tokens: (1, C) chunk right-padded to the fixed chunk width C (one jit
+        compile covers every chunk of every prompt); page_table: (1, max_pages)
+        this sequence's table; offset: () int32 logical position of
+        tokens[0, 0]; valid_len: () int32 real token count in the chunk;
+        write_start: () int32 first logical row to WRITE — rows below it are
+        already in the pool (shared prefix pages), and the
+        recompute-only-the-last-token case of a fully shared prompt sets
+        write_start past every row so the forward touches nothing. Returns
+        (cache, () int32 greedy token sampled at the chunk's last valid
+        position — meaningful only on a prompt's final chunk).
+
+        Chunked == single-dispatch bit-exactness: the paged branch always
+        attends over the full gathered cache (never chunk-local flash), and
+        every per-row op is row-independent, so splitting a prompt across
+        chunks cannot change any written row or the sampled token.
+        """
+        rows = (jnp.asarray(offset, jnp.int32)
+                + jnp.arange(tokens.shape[1], dtype=jnp.int32))[None, :]
+        wm = (rows >= write_start) & (rows < offset + valid_len)
+        hidden, _, new_cache = T.forward(
+            params, tokens, self.cfg, caches=cache,
+            cache_pos=jnp.reshape(jnp.asarray(offset, jnp.int32), (1,)),
+            cache_write_mask=wm, is_prefill=True, page_table=page_table,
+            paged_impl=paged_impl)
+        last = hidden[:, valid_len - 1]                    # (1, d)
+        return new_cache, T.sample_fn(params, last[:, None], self.cfg)[0, 0]
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -72,10 +72,15 @@ def block_apply(p: dict, x: Array, *, cfg: ModelConfig, kind: str,
                 cache_write_mask: Optional[Array] = None,
                 enc: Optional[Array] = None,
                 cross_kv: Optional[dict] = None, prefill: bool = False,
+                page_table: Optional[Array] = None,
+                paged_impl: str = "gather",
                 ) -> Tuple[Array, Optional[dict], Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ("ssm1", "ssm2"):
+        if page_table is not None:
+            raise ValueError("paged KV cache requires attention layers; "
+                             f"got layer kind {kind!r}")
         if kind == "ssm1":
             h, new_cache = S.mamba1_apply(p["ssm"], norm_apply(x, p["ln1"], cfg),
                                           cfg=cfg, cache=cache, prefill=prefill)
@@ -91,7 +96,8 @@ def block_apply(p: dict, x: Array, *, cfg: ModelConfig, kind: str,
     h, new_cache = attn_fn(p["attn"], norm_apply(x, p["ln1"], cfg), cfg=cfg,
                            positions=positions, window=window, cache=cache,
                            cache_pos=cache_pos,
-                           cache_write_mask=cache_write_mask)
+                           cache_write_mask=cache_write_mask,
+                           page_table=page_table, paged_impl=paged_impl)
     x = x + h
     if kind == "encdec":
         xh = A.cross_apply(p["xattn"], norm_apply(x, p["ln_x"], cfg),
@@ -222,7 +228,7 @@ def _maybe_remat(body, cfg: ModelConfig):
 def _scan_group(p_stacked, x, *, cfg, kind, positions, windows=None,
                 thetas=None, causal=True, caches=None, cache_pos=None,
                 cache_write_mask=None, enc=None, cross_kvs=None,
-                prefill=False):
+                prefill=False, page_table=None, paged_impl="gather"):
     """lax.scan over a stacked layer group. caches/cross_kvs are stacked on
     the leading (layer) axis when present."""
     n = jax.tree_util.tree_leaves(p_stacked)[0].shape[0]
@@ -248,7 +254,8 @@ def _scan_group(p_stacked, x, *, cfg, kind, positions, windows=None,
             p, x, cfg=cfg, kind=kind, positions=positions, window=w, theta=th,
             causal=causal, cache=c, cache_pos=cache_pos,
             cache_write_mask=cache_write_mask, enc=enc,
-            cross_kv=ckv, prefill=prefill)
+            cross_kv=ckv, prefill=prefill, page_table=page_table,
+            paged_impl=paged_impl)
         return (x, aux_acc + aux), new_c
 
     body = _maybe_remat(body, cfg)
@@ -319,6 +326,8 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
             caches: Optional[dict] = None, cache_pos=None,
             cache_write_mask: Optional[Array] = None,
             is_prefill: bool = False,
+            page_table: Optional[Array] = None,
+            paged_impl: str = "gather",
             ) -> Tuple[Array, Array, Optional[dict]]:
     """Token ids -> final hidden states. Returns (hidden, aux_loss, new_caches).
 
@@ -326,7 +335,13 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
     * decode: tokens (B,1), caches + cache_pos set.
     * cache_write_mask: optional (B,) bool — batch rows with False leave the
       cache untouched (bucketed prefill runs over the SHARED slot cache and
-      only commits the admitted rows; live slots keep their K/V).
+      only commits the admitted rows; live slots keep their K/V). With a
+      page table it may also be (B, S) bool — per-token masks for a padded
+      prefill chunk's tail.
+    * page_table: optional (B, max_pages) int32 — caches hold PAGE POOLS (see
+      init_paged_cache) and attention layers address them through the table;
+      paged_impl selects "gather" (bit-exact oracle) or "flash" (in-kernel
+      gather).
     * frames: whisper encoder stub embeddings; patches: vlm prefix embeddings.
     """
     x = L.embed(tokens, params["embed"])
@@ -362,6 +377,9 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
     new_caches: Optional[dict] = {} if caches is not None else None
 
     if cfg.family == "hybrid":
+        if page_table is not None:
+            raise ValueError("paged KV cache is not supported for hybrid "
+                             "(SSM-state) stacks")
         x, aux_total, new_caches = _hybrid_forward(
             params, x, cfg=cfg, positions=positions, caches=caches,
             cache_pos=cache_pos, prefill=is_prefill)
@@ -376,7 +394,8 @@ def forward(params, tokens: Array, cfg: ModelConfig, *,
                 positions=positions, windows=win, thetas=theta,
                 caches=grp_cache, cache_pos=cache_pos,
                 cache_write_mask=cache_write_mask, enc=enc,
-                cross_kvs=grp_cross, prefill=is_prefill)
+                cross_kvs=grp_cross, prefill=is_prefill,
+                page_table=page_table, paged_impl=paged_impl)
             aux_total = aux_total + aux
             if new_caches is not None:
                 new_caches[name] = new_c
@@ -454,4 +473,44 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
             caches[name] = mla_c(n)
         else:
             caches[name] = kv(n)
+    return caches
+
+
+def paged_cache_supported(cfg: ModelConfig) -> bool:
+    """True iff every cached layer is a (GQA or MLA) attention layer — SSM
+    states and encoder cross-KV have no per-token rows to page."""
+    if cfg.family in ("ssm", "hybrid") or cfg.encoder is not None:
+        return False
+    return all(kind not in ("ssm1", "ssm2") for _, kind, _ in layer_plan(cfg))
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None) -> dict:
+    """Zero page POOLS, stacked per layer group.
+
+    Leaves mirror :func:`init_cache` but replace the (batch, max_len) row
+    plane with a single shared (num_pages, page_size) pool: pool pages are
+    batch-agnostic, so one pool serves the B-way decode batch and batch-1
+    prefill chunks simultaneously, and two sequences can reference the same
+    page (refcounted prefix sharing — serve/paged.py owns the allocator).
+    """
+    dtype = dtype or cfg.dtype
+    if not paged_cache_supported(cfg):
+        raise ValueError("paged KV cache requires a pure-attention decoder "
+                         f"stack (family={cfg.family!r})")
+    caches: Dict[str, PyTree] = {}
+
+    def kv(n):
+        shp = (n, num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+    def mla_c(n):
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((n, num_pages, page_size, m.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros((n, num_pages, page_size,
+                                     m.rope_head_dim), dtype)}
+
+    for name, kind, n in layer_plan(cfg):
+        caches[name] = mla_c(n) if kind.startswith("mla") else kv(n)
     return caches

@@ -35,6 +35,20 @@ bias (Eq. 15) and colsums precomputed; at decode time the Eq. 20 zero-point
 adjuster removes the zero-point cross terms. Activations quantize per token
 row, so batched, bucketed, and chunk-fused decoding all stay bit-identical
 to sequential decoding.
+
+**Paged mode** (``paged=True``): the per-slot ``slots x max_len`` contiguous
+cache is replaced by a shared page POOL per cache leaf (``num_pages`` pages
+of ``page_size`` tokens) addressed through a per-slot ``(B, max_pages)``
+int32 page table. Pages are allocated on demand as a sequence grows, full
+prompt pages are keyed by a rolling hash and SHARED across requests with
+identical prefixes (refcounted; copy-on-write when a shared page would be
+partially overwritten), and long prompts prefill in page-aligned CHUNKS —
+one chunk dispatch per slot per step, interleaved with decode dispatches,
+so a long prefill no longer stalls already-active slots. The contiguous
+path is retained untouched as the bit-exactness oracle: with
+``paged_attention="gather"`` the paged decode gathers pool rows into the
+contiguous layout and runs the identical attention math, so emitted tokens
+are bit-identical to ``paged=False`` (float and int8-FFIP alike).
 """
 from __future__ import annotations
 
@@ -42,7 +56,7 @@ import collections
 import contextlib
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +65,9 @@ import numpy as np
 from repro.core import quant
 from repro.core.gemm import GemmConfig, use_gemm
 from repro.models.model import Model
+from repro.models.transformer import paged_cache_supported
+from repro.serve.paged import (PageAllocator, PrefixIndex, page_keys,
+                               partial_key)
 
 _MIN_BUCKET = 4
 
@@ -62,6 +79,22 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1              # -1: never
     out_tokens: Optional[List[int]] = None
+    t_submit: float = 0.0         # set by submit()
+    t_first: float = 0.0          # set when the first token lands (TTFT)
+
+
+@dataclasses.dataclass
+class _PagedSeq:
+    """Paged-mode bookkeeping for one in-flight request."""
+    n: int                        # prompt length
+    pages: List[int]              # pool page ids for logical pages 0..k-1
+    keys: List[bytes]             # chain keys of the FULL prompt pages
+    pkey: Optional[bytes]         # key of the terminal partial page (if any)
+    filled: int                   # leading prompt rows already in the pool
+    compute_next: int             # next prompt token index to run
+    shared_tail: bool             # pages[-1] attached shared -> COW on write
+    reserve: int                  # pages reserved (admission) not yet alloc'd
+    registered: int = 0           # full prompt pages published to the index
 
 
 @dataclasses.dataclass
@@ -69,6 +102,7 @@ class _Slot:
     req: Optional[Request] = None
     pos: int = 0                  # tokens currently in this slot's cache rows
     remaining: int = 0
+    seq: Optional[_PagedSeq] = None   # paged mode only
 
 
 def _cache_batch_axes(model: Model, batch: int, max_len: int):
@@ -112,7 +146,11 @@ class BatchServer:
                  greedy: bool = True, quantized: bool = False,
                  gemm_algo: str = "ffip", gemm_impl: Optional[str] = None,
                  gemm_block=None, decode_chunk: int = 1,
-                 prefill_buckets: bool = True):
+                 prefill_buckets: bool = True, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 paged_attention: str = "gather",
+                 prefix_sharing: bool = True):
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
         if decode_chunk < 1:
@@ -121,15 +159,57 @@ class BatchServer:
         self.b = batch_slots
         self.max_len = max_len
         self.decode_chunk = decode_chunk
-        self.cache = model.init_cache(batch_slots, max_len)
+        self.paged = paged
         self.slots = [_Slot() for _ in range(batch_slots)]
         self._queue: "collections.deque[Request]" = collections.deque()
         self._completed: List[Request] = []
-        self._bucketed = (prefill_buckets
-                          and _cache_supports_buckets(model, batch_slots,
-                                                      max_len))
-        self._batch_axes = (None if self._bucketed else
-                            _cache_batch_axes(model, batch_slots, max_len))
+        if paged:
+            if page_size < 1 or (page_size & (page_size - 1)):
+                raise ValueError(f"page_size must be a power of two, "
+                                 f"got {page_size}")
+            if max_len % page_size:
+                raise ValueError(f"max_len ({max_len}) must be a multiple of "
+                                 f"page_size ({page_size})")
+            if not paged_cache_supported(model.cfg):
+                raise ValueError("paged=True requires a pure-attention "
+                                 f"decoder (family={model.cfg.family!r})")
+            if paged_attention not in ("gather", "flash"):
+                raise ValueError(f"paged_attention must be 'gather' or "
+                                 f"'flash', got {paged_attention!r}")
+            self.page_size = page_size
+            self.max_pages = max_len // page_size
+            self.num_pages = (num_pages if num_pages is not None
+                              else batch_slots * self.max_pages)
+            self.prefill_chunk = prefill_chunk or max_len
+            if (self.prefill_chunk % page_size
+                    or not 0 < self.prefill_chunk <= max_len):
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must be a "
+                    f"page-aligned length in (0, max_len]")
+            self.paged_attention = paged_attention
+            self.prefix_sharing = prefix_sharing
+            self.alloc = PageAllocator(self.num_pages)
+            self.prefix = PrefixIndex(self.alloc)
+            self._reserved = 0          # pages promised to admitted requests
+            self.events: List[Tuple] = []   # dispatch interleaving log
+            self.cache = model.init_paged_cache(self.num_pages, page_size)
+            self._bucketed = False
+            self._batch_axes = None
+            self._decode_paged = jax.jit(self._decode_paged_impl,
+                                         donate_argnums=(2,))
+            self._prefill_chunk_fn = jax.jit(self._prefill_chunk_impl,
+                                             donate_argnums=(2,))
+            self._copy_page = jax.jit(
+                lambda cache, src, dst: jax.tree.map(
+                    lambda leaf: leaf.at[:, dst].set(leaf[:, src]), cache),
+                donate_argnums=(0,))
+        else:
+            self.cache = model.init_cache(batch_slots, max_len)
+            self._bucketed = (prefill_buckets
+                              and _cache_supports_buckets(model, batch_slots,
+                                                          max_len))
+            self._batch_axes = (None if self._bucketed else
+                                _cache_batch_axes(model, batch_slots, max_len))
         # GEMM provider scope for the whole serving forward. ``gemm_impl``
         # ("pallas") routes the projections through the Pallas kernels and
         # ``gemm_block`` ("auto" / explicit (bm,bn,bk)) picks their tiling
@@ -173,7 +253,13 @@ class BatchServer:
         return {"prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
                 "prefill_tokens": 0, "decode_tokens": 0,
                 "prefill_dispatches": 0, "decode_dispatches": 0,
-                "host_bytes_prefill": 0, "host_bytes_decode": 0}
+                "host_bytes_prefill": 0, "host_bytes_decode": 0,
+                # paged-mode extras (zero in contiguous mode). Page-table
+                # uploads get their OWN byte counter so the contiguous
+                # host-bytes accounting keeps its exact per-dispatch formula.
+                "host_bytes_page_tables": 0, "prefill_chunks": 0,
+                "prefix_hit_tokens": 0, "cow_copies": 0,
+                "pages_in_use": 0, "pages_peak": 0}
 
     # -- quantized decode mode --------------------------------------------
     def _gemm_scope(self):
@@ -219,6 +305,21 @@ class BatchServer:
         cache = jax.tree.map(put, cache, new_one, self._batch_axes)
         return cache, jnp.argmax(logits[0]).astype(jnp.int32)
 
+    def _decode_paged_impl(self, params, last, cache, pos, live, rem, eos,
+                           page_table):
+        self.compiles["decode"] += 1
+        return self.model.sample_steps(
+            params, last, cache, pos, live, rem, eos,
+            steps=self.decode_chunk, page_table=page_table,
+            paged_impl=self.paged_attention)
+
+    def _prefill_chunk_impl(self, params, tokens, cache, page_table, offset,
+                            valid_len, write_start):
+        self.compiles["prefill"] += 1   # one entry total: fixed chunk width
+        return self.model.prefill_chunk_paged(
+            params, tokens, cache, page_table, offset, valid_len,
+            write_start, paged_impl=self.paged_attention)
+
     # -- prefill -----------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
         b = _MIN_BUCKET
@@ -226,12 +327,25 @@ class BatchServer:
             b *= 2
         return min(b, self.max_len)
 
+    @staticmethod
+    def cache_rows(prompt_len: int, max_new_tokens: int) -> int:
+        """Cache rows a request can ever occupy. The prompt takes
+        ``prompt_len`` rows; each DECODE STEP writes one more — and the final
+        sampled token is emitted without a step following it, so it never
+        writes a row. ``max_new_tokens`` new tokens therefore need only
+        ``max_new_tokens - 1`` rows beyond the prompt (paged admission sizes
+        its page reservation from the same formula)."""
+        return prompt_len + max(max_new_tokens, 1) - 1
+
     def submit(self, req: Request):
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
+        rows = self.cache_rows(len(req.prompt), req.max_new_tokens)
+        if rows > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}) exceeds "
-                f"max_len ({self.max_len})")
+                f"max_new_tokens ({req.max_new_tokens}) needs {rows} cache "
+                f"rows (the last sampled token is never written) but "
+                f"max_len is {self.max_len}")
+        req.t_submit = time.perf_counter()
         req.out_tokens = []
         self._queue.append(req)
 
@@ -242,20 +356,27 @@ class BatchServer:
         self._completed.append(req)
 
     def _place(self, slot_i: int, req: Request, first: int):
-        """Post-prefill bookkeeping shared by both prefill paths."""
+        """Post-prefill bookkeeping shared by all prefill paths."""
         req.out_tokens.append(first)
+        req.t_first = time.perf_counter()
+        slot = self.slots[slot_i]
         if req.max_new_tokens <= 1 or first == req.eos_id:
             # finished at prefill (token budget of 1, or EOS on the first
-            # token): never occupies the slot — admission keeps going.
+            # token): releases the slot immediately — admission keeps going.
             self._finish(req)
+            if slot.seq is not None:
+                self._release_seq(slot)
+            slot.req = None
             return
-        slot = self.slots[slot_i]
         slot.req = req
         slot.pos = len(req.prompt)   # prompt rows in cache; the first
         slot.remaining = req.max_new_tokens - 1   # generated token is in
         # flight and will be written at row `pos` by the next decode step
 
     def _admit(self, params):
+        if self.paged:
+            self._admit_paged()
+            return
         while self._queue:
             free = [i for i, s in enumerate(self.slots) if s.req is None]
             if not free:
@@ -323,15 +444,205 @@ class BatchServer:
         self.stats["host_bytes_prefill"] += 4
         self._place(slot_i, req, first_h)
 
+    # -- paged mode --------------------------------------------------------
+    def _admit_paged(self):
+        """Admission is pure host bookkeeping in paged mode — no device work.
+        The prompt runs later, one page-aligned chunk per :meth:`step`, via
+        :meth:`_prefill_tick`. Strict FIFO: a head-of-queue request that
+        cannot reserve its worst-case pages blocks the queue (it will fit
+        once running requests release pages)."""
+        while self._queue:
+            free = [i for i, s in enumerate(self.slots) if s.req is None]
+            if not free:
+                return
+            if not self._try_admit_paged(free[0], self._queue[0]):
+                if (all(s.req is None for s in self.slots)
+                        and not len(self.prefix)):
+                    req = self._queue[0]
+                    raise RuntimeError(
+                        f"request {req.rid} needs more pages than the pool "
+                        f"holds ({self.alloc.num_pages}) even with every "
+                        f"slot idle — raise num_pages or lower "
+                        f"max_new_tokens")
+                return
+            self._queue.popleft()
+
+    def _try_admit_paged(self, slot_i: int, req: Request) -> bool:
+        """Plan a request: attach shared prefix pages from the index
+        (refcounted), then reserve worst-case fresh pages — evicting LRU
+        index entries under pressure. All-or-nothing: on failure every
+        attached page is released and the queue head stays put."""
+        ps = self.page_size
+        n = len(req.prompt)
+        pages_needed = -(-self.cache_rows(n, req.max_new_tokens) // ps)
+        keys = page_keys(req.prompt, ps) if self.prefix_sharing else []
+        pkey = partial_key(req.prompt, ps) if self.prefix_sharing else None
+        attached: List[int] = []
+        hit = 0
+        shared_tail = False
+        for k in keys:                       # walk stops at the first miss:
+            page = self.prefix.get(k)        # chained keys make any later
+            if page is None:                 # match impossible
+                break
+            self.alloc.incref(page)
+            attached.append(page)
+            hit += ps
+        if pkey is not None and len(attached) == len(keys):
+            page = self.prefix.get(pkey)
+            if page is not None:             # whole-prompt match incl. tail
+                self.alloc.incref(page)
+                attached.append(page)
+                shared_tail = True
+                hit = n
+        # Worst-case fresh pages: everything not attached, plus one COW copy
+        # if the shared tail page will be decoded into (first decode step
+        # writes row n, which lives in the tail page).
+        worst = (pages_needed - len(attached)
+                 + (1 if shared_tail and req.max_new_tokens > 1 else 0))
+        while (self.alloc.free_count - self._reserved < worst
+               and len(self.prefix)):
+            self.prefix.evict_lru(1)
+        if self.alloc.free_count - self._reserved < worst:
+            for p in attached:
+                self.alloc.decref(p)
+            return False
+        self._reserved += worst
+        self.stats["prefix_hit_tokens"] += hit
+        seq = _PagedSeq(
+            n=n, pages=attached, keys=keys, pkey=pkey, filled=hit,
+            # a fully shared prompt still recomputes its LAST token: the
+            # first sampled token needs that hidden state (writes nothing —
+            # write_start == n covers no rows).
+            compute_next=min(hit, n - 1), shared_tail=shared_tail,
+            reserve=worst, registered=min(len(attached), len(keys)))
+        slot = self.slots[slot_i]
+        slot.req = req
+        slot.seq = seq
+        slot.pos = 0
+        slot.remaining = 0               # set by _place on the final chunk
+        return True
+
+    def _alloc_page(self, seq: _PagedSeq) -> int:
+        page = self.alloc.alloc()
+        assert seq.reserve > 0, "page allocated beyond admission reservation"
+        seq.reserve -= 1
+        self._reserved -= 1
+        return page
+
+    def _ensure_pages(self, slot: _Slot, first_row: int, end_row: int):
+        """Make rows [first_row, end_row) WRITABLE: allocate missing pages
+        and copy-on-write any shared page in the range (refcount > 1 means
+        the prefix index and/or another sequence still reads it)."""
+        if first_row >= end_row:
+            return
+        seq = slot.seq
+        ps = self.page_size
+        for li in range(first_row // ps, -(-end_row // ps)):
+            if li >= len(seq.pages):
+                seq.pages.append(self._alloc_page(seq))
+            elif self.alloc.refcount(seq.pages[li]) > 1:
+                old = seq.pages[li]
+                new = self._alloc_page(seq)
+                self.cache = self._copy_page(
+                    self.cache, jnp.asarray(old, jnp.int32),
+                    jnp.asarray(new, jnp.int32))
+                self.alloc.decref(old)
+                seq.pages[li] = new
+                self.stats["cow_copies"] += 1
+
+    def _register_prefix(self, seq: _PagedSeq, upto_rows: int):
+        """Publish every FULL prompt page whose rows are all filled."""
+        if not self.prefix_sharing:
+            return
+        while (seq.registered < len(seq.keys)
+               and (seq.registered + 1) * self.page_size <= upto_rows):
+            self.prefix.register(seq.keys[seq.registered],
+                                 seq.pages[seq.registered])
+            seq.registered += 1
+
+    def _release_seq(self, slot: _Slot):
+        """Drop a finished request's page references. Prompt pages stay
+        resident through the prefix index (which holds its own reference)
+        until LRU eviction; the terminal partial page is published here —
+        keyed by the whole prompt — so an identical prompt resubmitted later
+        skips prefill entirely."""
+        seq = slot.seq
+        self._register_prefix(seq, seq.n)
+        tail_li = seq.n // self.page_size
+        if (self.prefix_sharing and seq.pkey is not None
+                and len(seq.pages) > tail_li):
+            self.prefix.register(seq.pkey, seq.pages[tail_li])
+        for p in seq.pages:
+            self.alloc.decref(p)
+        self._reserved -= seq.reserve
+        seq.reserve = 0
+        slot.seq = None
+
+    def _prefill_tick(self, params) -> int:
+        """Dispatch at most ONE page-aligned prefill chunk per mid-prefill
+        slot, then return — the caller's decode dispatch runs next, so a
+        long prompt admits without stalling already-active slots for more
+        than one chunk's latency. Returns the number of chunks dispatched."""
+        work = 0
+        chunk = self.prefill_chunk
+        for slot_i, slot in enumerate(self.slots):
+            seq = slot.seq
+            if slot.req is None or seq is None or seq.compute_next >= seq.n:
+                continue
+            start = seq.compute_next
+            end = min(seq.n, (start // chunk + 1) * chunk)
+            self._ensure_pages(slot, max(start, seq.filled), end)
+            tokens = np.zeros((1, chunk), np.int32)
+            tokens[0, :end - start] = slot.req.prompt[start:end]
+            pt = np.zeros((1, self.max_pages), np.int32)
+            pt[0, :len(seq.pages)] = seq.pages
+            t0 = time.perf_counter()
+            with self._gemm_scope():
+                self.cache, tok = self._prefill_chunk_fn(
+                    params, jnp.asarray(tokens), self.cache, jnp.asarray(pt),
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(end - start, jnp.int32),
+                    jnp.asarray(seq.filled, jnp.int32))
+            last_chunk = end >= seq.n
+            if last_chunk:                   # token only meaningful here
+                first = int(jax.device_get(tok))
+                self.stats["host_bytes_prefill"] += 4
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self.stats["prefill_tokens"] += end - start
+            self.stats["prefill_dispatches"] += 1
+            self.stats["prefill_chunks"] += 1
+            self.stats["host_bytes_page_tables"] += int(pt.nbytes)
+            self.events.append(("prefill_chunk", slot.req.rid, start, end))
+            seq.compute_next = end
+            seq.filled = max(seq.filled, end)
+            self._register_prefix(seq, seq.filled)
+            work += 1
+            if last_chunk:
+                self._place(slot_i, slot.req, first)
+        return work
+
+    def _refresh_page_stats(self):
+        self.stats["pages_in_use"] = self.alloc.in_use
+        self.stats["pages_peak"] = self.alloc.peak_in_use
+
     # -- decode ------------------------------------------------------------
     def step(self, params) -> int:
         """One fused decode dispatch (``decode_chunk`` lockstep steps) over
-        all active slots; returns #active at dispatch time."""
+        all active slots; in paged mode, preceded by at most one prefill
+        CHUNK per mid-prefill slot (chunked prefill interleaves with decode
+        instead of stalling it). Returns #active decode slots plus #prefill
+        chunks dispatched."""
         params = self._params_for(params)
         self._admit(params)
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        prefill_work = self._prefill_tick(params) if self.paged else 0
+        # mid-prefill paged slots hold remaining == 0 and sit out the decode
+        # dispatch; contiguous occupancy always implies remaining >= 1.
+        active = [i for i, s in enumerate(self.slots)
+                  if s.req is not None and s.remaining > 0]
         if not active:
-            return 0
+            if self.paged:
+                self._refresh_page_stats()
+            return prefill_work
         last = np.zeros((self.b,), np.int32)
         pos = np.zeros((self.b,), np.int32)
         live = np.zeros((self.b,), bool)
@@ -347,13 +658,34 @@ class BatchServer:
         # per-slot position vector: slot i writes KV at row pos[i] and masks
         # rows >= pos[i] + 1; inactive/frozen slots re-write their own row
         # with unchanged values, so the cache stays bit-identical to
-        # sequential decode across the whole chunk.
-        t0 = time.perf_counter()
-        with self._gemm_scope():
-            self.cache, toks = self._decode(
-                params, jnp.asarray(last), self.cache,
-                jnp.asarray(pos), jnp.asarray(live), jnp.asarray(rem),
-                jnp.asarray(eos))
+        # sequential decode across the whole chunk. (Paged mode instead GATES
+        # frozen slots' writes off — pool rows can be shared.)
+        if self.paged:
+            for i in active:
+                slot = self.slots[i]
+                self._ensure_pages(slot, slot.pos,
+                                   slot.pos + min(self.decode_chunk,
+                                                  slot.remaining))
+            pt = np.zeros((self.b, self.max_pages), np.int32)
+            for i in active:
+                seq = self.slots[i].seq
+                pt[i, :len(seq.pages)] = seq.pages
+            self.events.append(
+                ("decode", tuple(self.slots[i].req.rid for i in active)))
+            t0 = time.perf_counter()
+            with self._gemm_scope():
+                self.cache, toks = self._decode_paged(
+                    params, jnp.asarray(last), self.cache,
+                    jnp.asarray(pos), jnp.asarray(live), jnp.asarray(rem),
+                    jnp.asarray(eos), jnp.asarray(pt))
+            self.stats["host_bytes_page_tables"] += int(pt.nbytes)
+        else:
+            t0 = time.perf_counter()
+            with self._gemm_scope():
+                self.cache, toks = self._decode(
+                    params, jnp.asarray(last), self.cache,
+                    jnp.asarray(pos), jnp.asarray(live), jnp.asarray(rem),
+                    jnp.asarray(eos))
         toks_h = np.asarray(jax.device_get(toks))       # (chunk, B) int32
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_dispatches"] += 1
@@ -373,11 +705,15 @@ class BatchServer:
                 emitted += 1
                 if slot.remaining <= 0 or nxt == slot.req.eos_id:
                     self._finish(slot.req)
+                    if slot.seq is not None:
+                        self._release_seq(slot)
                     slot.req = None   # freed -> next _admit refills it
             if emitted:
                 self.stats["steps"] += 1
                 self.stats["decode_tokens"] += emitted
-        return len(active)
+        if self.paged:
+            self._refresh_page_stats()
+        return len(active) + prefill_work
 
     def run_until_drained(self, params, *, max_steps: int = 10_000,
                           ) -> List[Request]:

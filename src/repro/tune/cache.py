@@ -107,8 +107,20 @@ class ScheduleCache:
             # torn files, not this lost-update race.
             try:
                 self._entries = {**_read_entries(self.path), **self._entries}
+            except FileNotFoundError:
+                pass   # nothing on disk yet: ours is the truth
             except Exception:
-                pass   # missing or corrupt on-disk file: ours is the truth
+                # Corrupt on-disk file at SAVE time (e.g. another process
+                # crashed mid-write before the atomic rename existed, or the
+                # file was hand-edited). Overwriting it here would DESTROY
+                # the evidence the load-time path carefully preserves —
+                # quarantine it the same way before rewriting cleanly.
+                self.recovered = True
+                try:
+                    self.path.rename(self.path.with_name(self.path.name +
+                                                         ".corrupt"))
+                except OSError:
+                    pass
             payload = {"version": _VERSION, "entries": self._entries}
             self.path.parent.mkdir(parents=True, exist_ok=True)
             tmp = self.path.with_name(self.path.name + ".tmp")

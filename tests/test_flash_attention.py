@@ -1,10 +1,11 @@
-"""Flash-attention kernel vs naive oracle: fwd + grads, shape/window sweeps."""
+"""Flash-attention kernel vs naive oracle: fwd + grads, shape/window sweeps,
+fully-masked-row regression, and the paged (page-pool + page-table) kernel."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import flash_attention, flash_attention_paged
 
 
 def naive(q, k, v, causal=True, window=0):
@@ -83,6 +84,111 @@ def test_flash_bf16():
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=5e-2, atol=5e-2)
+
+
+def test_flash_fully_masked_rows_exact_zero():
+    """Regression (ISSUE 6): a q row whose sliding window lies entirely
+    beyond the available keys has NO valid entry in ANY k block. The online
+    softmax left m_new at NEG_INF for such blocks, so every masked entry
+    contributed exp(s - m_new) = exp(0) = 1 of phantom mass — the row came
+    out as the MEAN of all v rows instead of 0. With sq=256, sk=128, w=16,
+    rows >= sk - 1 + w = 143 are fully masked (k only covers positions
+    <= 127 but the window demands k_pos > q_pos - 16 >= 127)."""
+    sq, sk, w = 256, 128, 16
+    q, k, v = mk(2, sq, sk, 32, seed=6)
+    got = np.asarray(flash_attention(q, k, v, w, True, True))
+    dead = sk - 1 + w
+    assert np.all(got[:, dead:] == 0.0), \
+        "fully-masked rows must be exactly 0, not mean(v)"
+    assert np.any(got[:, dead:dead + 1] != got[:, :1])  # sanity: not all-0
+    want = np.asarray(naive(q, k, v, causal=True, window=w))
+    np.testing.assert_allclose(got[:, :dead], want[:, :dead],
+                               rtol=2e-3, atol=2e-3)
+
+
+# -- paged kernel -------------------------------------------------------------
+
+def _paged_ref(q, k_pool, v_pool, pt, lengths, q_start, window=0, scale=None,
+               causal=True):
+    """Gather-then-softmax oracle for the paged kernel."""
+    b, h, sq, d = q.shape
+    _, ps, kv, _ = k_pool.shape
+    group = max(h // kv, 1)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    out = np.zeros(q.shape[:3] + (v_pool.shape[-1],), np.float32)
+    for bi in range(b):
+        kg = np.concatenate([np.asarray(k_pool)[p] for p in pt[bi]], 0)
+        vg = np.concatenate([np.asarray(v_pool)[p] for p in pt[bi]], 0)
+        for hi in range(h):
+            s = (np.asarray(q[bi, hi], np.float32)
+                 @ kg[:, hi // group].astype(np.float32).T) * scale
+            qp = q_start[bi] + np.arange(sq)[:, None]
+            kp = np.arange(kg.shape[0])[None, :]
+            m = (kp < lengths[bi]) & np.ones((sq, 1), bool)
+            if causal:
+                m = m & (qp >= kp)
+            if window:
+                m = m & ((qp - kp) < window)
+            s = np.where(m, s, -np.inf)
+            with np.errstate(invalid="ignore"):
+                p = np.exp(s - s.max(1, keepdims=True))
+                p = np.nan_to_num(p / np.maximum(p.sum(1, keepdims=True),
+                                                 1e-30))
+            p = np.where(m, p, 0.0)
+            out[bi, hi] = p @ vg[:, hi // group].astype(np.float32)
+    return out
+
+
+def _mk_paged(b, h, kv, sq, d, dv, n_pages, ps, max_pages, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, kv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, kv, dv)), jnp.float32)
+    # page tables deliberately permuted: physical order != logical order
+    pt = np.stack([rng.permutation(n_pages)[:max_pages] for _ in range(b)])
+    return q, kp, vp, pt.astype(np.int32)
+
+
+@pytest.mark.parametrize("sq,window", [(1, 0), (4, 0), (4, 24)])
+def test_paged_matches_gathered_reference(sq, window):
+    b, h, kv, d, ps, mp = 2, 4, 2, 32, 8, 6
+    q, kp, vp, pt = _mk_paged(b, h, kv, sq, d, d, 16, ps, mp, seed=1)
+    lengths = np.asarray([ps * mp, 19], np.int32)     # full + ragged
+    q_start = lengths - sq                            # decode chunk at the end
+    got = flash_attention_paged(q, kp, vp, pt, lengths, q_start, window,
+                                interpret=True)
+    want = _paged_ref(q, kp, vp, pt, lengths, q_start, window)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_paged_fully_masked_rows_exact_zero():
+    """Same NEG_INF regression surface as the dense kernel, hit the way the
+    serving path hits it: a decode chunk whose early rows out-window every
+    valid key. Also: a zero-length sequence returns exactly 0."""
+    b, h, kv, d, ps, mp = 2, 2, 2, 32, 8, 4
+    q, kp, vp, pt = _mk_paged(b, h, kv, 8, d, d, 8, ps, mp, seed=2)
+    lengths = np.asarray([16, 0], np.int32)
+    q_start = np.asarray([30, 0], np.int32)   # rows at 30.. vs keys < 16
+    got = np.asarray(flash_attention_paged(q, kp, vp, pt, lengths, q_start,
+                                           16, interpret=True))
+    # row position p attends (p-16, p]: p >= 31 sees nothing of keys < 16
+    assert np.all(got[0, :, 1:] == 0.0)
+    assert np.all(got[1] == 0.0), "zero-length sequence must output 0"
+    want = _paged_ref(q, kp, vp, pt, lengths, q_start, 16)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_paged_mla_shape_and_scale():
+    """Absorbed-MLA decode shape: KV=1 head, dv != d, explicit scale."""
+    b, h, d, dv, ps, mp = 2, 4, 40, 32, 4, 4
+    q, kp, vp, pt = _mk_paged(b, h, 1, 1, d, dv, 8, ps, mp, seed=3)
+    lengths = np.asarray([13, 9], np.int32)
+    q_start = lengths - 1
+    scale = 1.0 / (48 ** 0.5)       # pre-absorption head dim, not d
+    got = flash_attention_paged(q, kp, vp, pt, lengths, q_start, 0,
+                                scale=scale, interpret=True)
+    want = _paged_ref(q, kp, vp, pt, lengths, q_start, 0, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
 
 
 def test_flash_traced_window():

@@ -138,4 +138,24 @@ def test_submit_rejects_overlong_request():
     srv = BatchServer(model, batch_slots=1, max_len=8)
     with pytest.raises(ValueError):
         srv.submit(Request(rid=0, prompt=np.zeros(6, np.int64),
-                           max_new_tokens=4))
+                           max_new_tokens=4))      # 6 + 4 - 1 = 9 rows > 8
+
+
+def test_submit_capacity_boundary_last_token_needs_no_row():
+    """Off-by-one regression: the FINAL sampled token is emitted but never
+    written back (no decode step follows it), so a request needs exactly
+    prompt + max_new - 1 cache rows. Equality with max_len must be ADMITTED
+    and complete with the full budget; one more must be rejected."""
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=1, max_len=16)
+    p = _prompts(cfg, [12], seed=6)[0]
+    srv.submit(Request(rid=0, prompt=p, max_new_tokens=5))   # 12+5-1 == 16
+    done = srv.run_until_drained(params)
+    assert len(done) == 1 and len(done[0].out_tokens) == 5
+    with pytest.raises(ValueError):
+        srv.submit(Request(rid=1, prompt=p, max_new_tokens=6))
+    # a prompt filling the WHOLE cache still admits a single-token request
+    full = _prompts(cfg, [16], seed=7)[0]
+    srv.submit(Request(rid=2, prompt=full, max_new_tokens=1))
+    done = srv.run_until_drained(params)
+    assert len(done) == 1 and len(done[0].out_tokens) == 1

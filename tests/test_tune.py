@@ -122,6 +122,28 @@ def test_corrupted_cache_recovers(tmp_path):
     assert c2.lookup(key)["blocks"] == e["blocks"]
 
 
+def test_corrupted_cache_quarantined_at_save_time(tmp_path):
+    """A cache instance that loaded a CLEAN file, then finds the on-disk file
+    corrupted at save() time (crashed concurrent writer, hand edit), must
+    quarantine the evidence exactly like the load-time path — not silently
+    overwrite it."""
+    path = tmp_path / "sched.json"
+    c = ScheduleCache(path)
+    c.lookup("warm")            # load: file absent, nothing to recover
+    assert not c.recovered
+    path.write_text("{ trashed between load and save !!!")
+    c.put("a|f|i8|m8n8k8|cpu", {"blocks": {"bm": 8, "bn": 32, "bk": 8}})
+    assert c.recovered, "save-time corruption must be flagged"
+    corrupt = path.with_name(path.name + ".corrupt")
+    assert corrupt.exists(), "corrupt file kept aside for debugging"
+    assert corrupt.read_text().startswith("{ trashed"), \
+        "quarantine must preserve the corrupt bytes, not our rewrite"
+    # and the rewrite itself is clean and complete
+    c2 = ScheduleCache(path)
+    assert not c2.recovered
+    assert c2.lookup("a|f|i8|m8n8k8|cpu") is not None
+
+
 def test_cache_save_merges_concurrent_writers(tmp_path):
     """Two tuner processes sharing a path must not erase each other's
     buckets: save() re-reads and merges on-disk entries before writing."""

@@ -29,6 +29,14 @@ long-prefill + decode mix. ``comparison_paged`` re-runs the identical mix on
 the contiguous cache and reports the TTFT and footprint side by side (and
 asserts the paged gather outputs are byte-identical to contiguous).
 
+``results_prepared`` times the repro.prepare warm-start contract: cold
+in-process offline prep (int8 quantization + Eq. 9 y-deltas) vs saving and
+loading the serialized artifact, then serves from the loaded artifact and
+asserts ``recomputed == 0``. ``results_tp`` sweeps tensor-parallel decode
+(BatchServer ``mesh=``, model axis 1/2/4 over the visible devices — force
+host devices with XLA_FLAGS to sweep past 1) and asserts output tokens stay
+identical across TP widths.
+
 CAVEAT (same as gemm_micro): this container is CPU-only, so absolute timings
 measure the XLA-CPU + interpret-mode harness, not accelerator silicon — the
 load-bearing outputs are the phase RATIOS, the chunk-sweep trend, the
@@ -124,7 +132,8 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
           max_len: int, quantized: bool, decode_chunk: int,
           gemm_impl=None, gemm_block=None, seed: int = 0,
           paged: bool = False, page_size: int = 16, prefill_chunk=None,
-          paged_attention: str = "gather", mix_long_len: int = 0) -> dict:
+          paged_attention: str = "gather", mix_long_len: int = 0,
+          mesh=None, prepared=None, keep_tokens: bool = False) -> dict:
     cfg = configs.smoke_config(configs.get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -133,7 +142,8 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
                       gemm_impl=gemm_impl, gemm_block=gemm_block,
                       paged=paged, page_size=page_size,
                       prefill_chunk=prefill_chunk,
-                      paged_attention=paged_attention)
+                      paged_attention=paged_attention,
+                      mesh=mesh, prepared=prepared)
 
     def _workload(budget, s):
         if mix_long_len:
@@ -222,9 +232,102 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
             "prefill_chunks": st["prefill_chunks"],
             "host_bytes_page_tables": st["host_bytes_page_tables"],
         }
-    elif mix_long_len:
+    elif mix_long_len or keep_tokens:
         out["tokens_by_rid"] = {r.rid: list(r.out_tokens) for r in done}
     return out
+
+
+def bench_prepared(arch: str, *, slots: int, requests: int, max_new: int,
+                   max_len: int) -> dict:
+    """Cold offline prep vs artifact warm start (the repro.prepare contract):
+    time the in-process prep (quantize + Eq. 9 y-deltas), the artifact
+    save/load roundtrip, and a warm serve from the loaded artifact with the
+    zero-recompute assertion."""
+    import shutil
+    import tempfile
+
+    from repro import prepare
+
+    cfg = configs.smoke_config(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    pm = prepare.prepare_lm(params, quantized=True)
+    # the transforms are lazy jax ops until materialized — block before
+    # stopping the clock so cold_prep_s is the real offline cost
+    jax.block_until_ready(jax.tree.leaves(pm.params))
+    jax.block_until_ready(list(pm.derived.values()))
+    cold_prep_s = time.perf_counter() - t0
+
+    tmp = tempfile.mkdtemp(prefix="serve_bench_prep_")
+    art_dir = pathlib.Path(tmp) / "artifact"
+    try:
+        t0 = time.perf_counter()
+        pm.save(art_dir)
+        save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pm2 = prepare.load(art_dir)
+        jax.block_until_ready(jax.tree.leaves(pm2.params))
+        warm_load_s = time.perf_counter() - t0
+        nbytes = sum(f.stat().st_size for f in art_dir.iterdir())
+
+        srv = BatchServer(model, batch_slots=slots, max_len=max_len,
+                          quantized=True, decode_chunk=4, prepared=pm2)
+        for r in _requests(cfg, requests, max_new, 0):
+            srv.submit(r)
+        done = srv.run_until_drained(params)
+        assert len(done) == requests, "serve_bench: requests dropped"
+        assert pm2.recomputed == 0, pm2.recompute_report()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    st = srv.stats
+    return {
+        "arch": cfg.name,
+        "cold_prep_s": round(cold_prep_s, 3),
+        "save_s": round(save_s, 3),
+        "warm_load_s": round(warm_load_s, 3),
+        "prep_over_load": round(cold_prep_s / max(warm_load_s, 1e-9), 1),
+        "artifact_bytes": nbytes,
+        "y_deltas": len(pm.derived),
+        "recomputed_after_warm_serve": pm2.recomputed,
+        "warm_serve_decode_ms_per_step":
+            round(1e3 * st["decode_s"] / max(st["steps"], 1), 2),
+    }
+
+
+def bench_tp(arch: str, *, slots: int, requests: int, max_new: int,
+             max_len: int) -> list:
+    """Tensor-parallel decode sweep: ms/step at model-parallel 1/2/4 over
+    whatever devices are visible (force host devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 to sweep past 1).
+    Output tokens are asserted identical across TP widths."""
+    from jax.sharding import Mesh
+
+    n = jax.device_count()
+    rows, ref_tokens = [], None
+    for tp in (1, 2, 4):
+        if tp > n:
+            continue
+        mesh = (Mesh(np.array(jax.devices()[:tp]).reshape(1, tp),
+                     ("data", "model")) if tp > 1 else None)
+        for quantized in (False, True):
+            r = bench(arch, slots=slots, requests=requests, max_new=max_new,
+                      max_len=max_len, quantized=quantized, decode_chunk=1,
+                      mesh=mesh, keep_tokens=True)
+            toks = r.pop("tokens_by_rid")
+            key = r["mode"]
+            if tp == 1:
+                ref_tokens = ref_tokens or {}
+                ref_tokens[key] = toks
+            elif ref_tokens and key in ref_tokens:
+                assert toks == ref_tokens[key], \
+                    f"tp={tp} {key} tokens diverge from single-device"
+            rows.append({"tp": tp, "mode": r["mode"],
+                         "decode_ms_per_step": r["decode_ms_per_step"],
+                         "tok_per_s": r["tok_per_s"],
+                         "compile_s": r["compile_s"]})
+    return rows
 
 
 def main():
@@ -250,6 +353,10 @@ def main():
                     help="long-prompt length in the paged TTFT mix")
     ap.add_argument("--skip-paged", action="store_true",
                     help="contiguous sweep only")
+    ap.add_argument("--skip-prepared", action="store_true",
+                    help="skip the prepared-artifact warm-start section")
+    ap.add_argument("--skip-tp", action="store_true",
+                    help="skip the tensor-parallel decode sweep")
     args = ap.parse_args()
     gemm_block = args.gemm_block
     if gemm_block and gemm_block != "auto":
@@ -324,6 +431,14 @@ def main():
             "prefix_hit_tokens": pg["paged"]["prefix_hit_tokens"],
         }
 
+    # --- prepared-artifact warm start + tensor-parallel decode sections
+    results_prepared = {} if args.skip_prepared else bench_prepared(
+        args.arch, slots=args.slots, requests=args.requests,
+        max_new=args.max_new, max_len=args.max_len)
+    results_tp = [] if args.skip_tp else bench_tp(
+        args.arch, slots=args.slots, requests=args.requests,
+        max_new=args.max_new, max_len=args.max_len)
+
     out = {
         "bench": "serve",
         "note": ("CPU-only container: interpret-mode timings; ratios, the "
@@ -342,6 +457,13 @@ def main():
         "comparison_paged": comparison_paged,
         "results": results,
         "results_paged": results_paged,
+        # repro.prepare warm start: cold offline prep vs artifact load, plus
+        # a warm serve with the zero-recompute assertion
+        "results_prepared": results_prepared,
+        # tensor-parallel decode ms/step at model-parallel 1/2/4 (widths
+        # beyond the visible device count are skipped; tokens asserted
+        # identical across widths)
+        "results_tp": results_tp,
     }
     OUT.write_text(json.dumps(out, indent=2) + "\n")
     for r in results:
@@ -372,6 +494,16 @@ def main():
               f"{c['prefill_tokens']['contiguous']} -> "
               f"{c['prefill_tokens']['paged_warm_prefix']}, pages_peak "
               f"{c['pages_peak']}/{c['contiguous_equiv_pages']}")
+    if results_prepared:
+        p = results_prepared
+        print(f"prepared: cold prep {p['cold_prep_s']}s vs warm load "
+              f"{p['warm_load_s']}s ({p['prep_over_load']}x), "
+              f"{p['y_deltas']} y-deltas, {p['artifact_bytes']} B, "
+              f"recomputed={p['recomputed_after_warm_serve']}")
+    for r in results_tp:
+        print(f"serve_bench.tp{r['tp']}.{r['mode']},"
+              f"decode_ms_per_step={r['decode_ms_per_step']},"
+              f"{r['tok_per_s']} tok/s")
     print(f"wrote {OUT}")
 
 

@@ -32,6 +32,11 @@ _INT_INFO = {
     jnp.uint16.dtype: (0, 2 ** 16 - 1),
 }
 
+# Offline-prep work counter: every per-layer weight quantization (dense AND
+# conv — prepare_quantized_conv routes through prepare_quantized_dense) bumps
+# it. repro.prepare snapshots it to prove a warm start re-quantized nothing.
+counters = {"prepare_dense": 0}
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantParams:
@@ -158,6 +163,7 @@ def prepare_quantized_dense(w: Array, *, dtype=jnp.int8,
       * ``zp``        — per-channel zero-points consumed by the Eq. (20)
         adjuster at decode time.
     """
+    counters["prepare_dense"] += 1
     qmin, qmax = _INT_INFO[jnp.dtype(dtype)]
     w = w.astype(jnp.float32)
     if symmetric:

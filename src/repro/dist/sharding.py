@@ -40,8 +40,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
-# Leaves that are never worth sharding (biases, norm params, scalars).
-_REPLICATED_LEAVES = frozenset({"b", "bias", "scale", "step", "pos"})
+# Leaves that are never worth sharding (biases, norm params, scalars, and
+# the tiny per-output-channel int8 epilogue vectors from repro.prepare).
+_REPLICATED_LEAVES = frozenset({"b", "bias", "scale", "step", "pos",
+                                "zp", "neg_beta", "colsum"})
 # Row-parallel projections: they consume model-sharded activations.
 _ROW_PARALLEL_PARENTS = frozenset({"wo", "down", "out_proj"})
 # Stacked per-expert weight banks from moe_init.
@@ -115,6 +117,11 @@ def _match_spec(path: str, shape: Tuple[int, ...], mesh,
     parts = [p for p in path.split("/") if p]
     leaf = parts[-1] if parts else ""
     parent = parts[-2] if len(parts) > 1 else ""
+    if parent == "q" and len(parts) > 2:
+        # offline-quantized leaves (qw/neg_beta/colsum under a "q" subtree,
+        # repro.prepare) shard like the projection that owns them, so e.g.
+        # wo/q/qw is row-parallel exactly like wo/w.
+        parent = parts[-3]
     ndim = len(shape)
     axes: list = [None] * ndim
 

@@ -36,7 +36,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import weakref
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -45,6 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import fip
+from repro.kernels import compat
 from repro.core.im2col import as_pair, conv_out_hw, Size2
 from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 from repro.kernels.ffip_gemm import ffip_tile
@@ -218,26 +218,12 @@ def _fused_flat(xf: Array, bg: Array, *, geom: ConvGeom, algo: str, bm: int,
     )(xf, bg)
 
 
-# Offline weight-derivation cache (stack / evenize / y-deltas), mirroring
-# ffip_gemm's per-weight y memo: keyed by id() with a liveness weakref guard
-# so a recycled address can't alias, tracers bypassed (trace-local; inside a
-# jit the derivation is constant-folded anyway). Without this every eager
-# FFIP conv forward would re-encode its filters (§4.4 says y is an OFFLINE
-# transform of the trained weights).
-_derived_cache: dict = {}
-
-
+# Offline weight derivations (stack / evenize / y-deltas) memoize through the
+# shared compat.derived cache (one id+weakref+tracer-bypass implementation for
+# this module and ffip_gemm). Without it every eager FFIP conv forward would
+# re-encode its filters (§4.4 says y is an OFFLINE transform of the weights).
 def _derived(tag: str, arr: Array, fn: Callable[[Array], Array]) -> Array:
-    if isinstance(arr, jax.core.Tracer):
-        return fn(arr)
-    key = (tag, id(arr))
-    hit = _derived_cache.get(key)
-    if hit is not None and hit[0]() is arr:
-        return hit[1]
-    val = fn(arr)
-    _derived_cache[key] = (
-        weakref.ref(arr, lambda _, k=key: _derived_cache.pop(k, None)), val)
-    return val
+    return compat.derived.get(tag, arr, fn)
 
 
 def _kernel_to_stack(kernel: Array, groups: int) -> Array:

@@ -17,13 +17,13 @@ reconstructed from the carried prefix (or pre-folded into bias, Eq. 15).
 from __future__ import annotations
 
 import functools
-import weakref
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 from repro.kernels.baseline_gemm import pad_to_blocks
 from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
@@ -31,23 +31,14 @@ from repro.core import fip
 
 Array = jax.Array
 
-# Per-weight y-delta cache (§4.4: y is precomputed offline and stored in place
-# of B). Keyed by id() with a liveness weakref guard — id() alone could alias
-# a new array allocated at a recycled address. Tracers are never cached: they
-# are trace-local, and inside a jit the cumsum is constant-folded anyway.
-_y_cache: dict = {}
+# Per-weight y-delta cache (§4.4: y is precomputed offline and stored in
+# place of B), shared with conv_gemm through compat.derived and seeded by
+# repro.prepare on artifact warm start (tag "y").
+Y_TAG = "y"
 
 
 def _y_for(b: Array) -> Array:
-    if isinstance(b, jax.core.Tracer):
-        return fip.make_y(b)
-    key = id(b)
-    hit = _y_cache.get(key)
-    if hit is not None and hit[0]() is b:
-        return hit[1]
-    y = fip.make_y(b)
-    _y_cache[key] = (weakref.ref(b, lambda _, k=key: _y_cache.pop(k, None)), y)
-    return y
+    return compat.derived.get(Y_TAG, b, fip.make_y)
 
 
 def ffip_tile(a, y, carry_ref, nn, *, fold_beta: bool):

@@ -20,10 +20,21 @@ something to bite on, and ``--compare-contiguous`` re-runs the identical
 workload on the contiguous cache and asserts BYTE-IDENTICAL outputs plus a
 paged-footprint win. Exits non-zero if any request is dropped or over/under-
 generates, so this doubles as the CI batcher-regression smoke.
+
+``--prepared DIR`` serves from a `repro.prepare` artifact (built with
+``python -m repro.launch.prepare``) instead of preparing weights in-process:
+warm start, zero re-quantization / y re-encode / re-tune. ``--mesh-model N``
+runs tensor-parallel decode over the first N devices (the repro.dist rule
+engine shards params + KV cache on the "model" axis) and
+``--compare-single-device`` re-runs the workload without the mesh and asserts
+byte-identical output tokens. ``--require-warm`` fails fast — listing the
+missing keys — if any schedule-cache lookup missed or the artifact had to
+recompute anything.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -54,7 +65,19 @@ def _make_prompts(cfg, n_requests, shared_prefix, rng):
     return prompts
 
 
-def _serve(model, params, prompts, max_new, args, *, paged):
+def _make_mesh(tp: int):
+    from jax.sharding import Mesh
+    n = len(jax.devices())
+    if tp > n:
+        raise SystemExit(f"--mesh-model {tp} but only {n} devices visible "
+                         f"(XLA_FLAGS=--xla_force_host_platform_device_count="
+                         f"{tp} forces host devices)")
+    return Mesh(np.array(jax.devices()[:tp]).reshape(1, tp),
+                ("data", "model"))
+
+
+def _serve(model, params, prompts, max_new, args, *, paged, mesh=None,
+           prepared=None):
     srv = BatchServer(
         model, batch_slots=args.slots, max_len=args.max_len,
         quantized=args.quantized, decode_chunk=args.decode_chunk,
@@ -62,7 +85,7 @@ def _serve(model, params, prompts, max_new, args, *, paged):
         prefill_buckets=not args.no_prefill_buckets, paged=paged,
         page_size=args.page_size, num_pages=args.num_pages,
         prefill_chunk=args.prefill_chunk,
-        paged_attention=args.paged_attention)
+        paged_attention=args.paged_attention, mesh=mesh, prepared=prepared)
     t0 = time.perf_counter()
     for i, p in enumerate(prompts):
         srv.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
@@ -109,6 +132,19 @@ def main():
     ap.add_argument("--compare-contiguous", action="store_true",
                     help="also run the contiguous cache on the same workload "
                          "and assert byte-identical outputs (needs --paged)")
+    ap.add_argument("--prepared", default=None, metavar="DIR",
+                    help="serve from a repro.prepare artifact "
+                         "(python -m repro.launch.prepare)")
+    ap.add_argument("--mesh-model", type=int, default=0, metavar="N",
+                    help="tensor-parallel decode over the first N devices "
+                         "(repro.dist sharding on the 'model' axis)")
+    ap.add_argument("--compare-single-device", action="store_true",
+                    help="re-run the workload without the mesh and assert "
+                         "byte-identical output tokens (needs --mesh-model)")
+    ap.add_argument("--require-warm", action="store_true",
+                    help="fail fast (listing missing keys) if any schedule "
+                         "lookup missed or the prepared artifact recomputed "
+                         "offline work")
     args = ap.parse_args()
     args.gemm_block_parsed = args.gemm_block
     if args.gemm_block and args.gemm_block != "auto":
@@ -121,15 +157,33 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    prepared = None
+    if args.prepared:
+        from repro import prepare
+        t0 = time.perf_counter()
+        prepared = prepare.load(args.prepared)
+        print(f"loaded prepared artifact {args.prepared} "
+              f"({len(prepared.derived)} y-deltas, "
+              f"{len(prepared.schedule)} schedule entries, "
+              f"{time.perf_counter() - t0:.2f}s)")
+    mesh = _make_mesh(args.mesh_model) if args.mesh_model else None
+    if args.require_warm:
+        from repro import tune
+        tune.reset_stats()
+
     rng = np.random.default_rng(0)
     prompts = _make_prompts(cfg, args.requests, args.shared_prefix, rng)
     srv, done, dt = _serve(model, params, prompts, args.max_new, args,
-                           paged=args.paged)
+                           paged=args.paged, mesh=mesh, prepared=prepared)
 
     total = sum(len(r.out_tokens) for r in done)
     mode = "int8-ffip" if args.quantized else "float"
     if args.paged:
         mode += f"/paged-{args.paged_attention}"
+    if mesh is not None:
+        mode += f"/tp{args.mesh_model}"
+    if prepared is not None:
+        mode += "/prepared"
     st = srv.stats
     print(f"[{mode}] {len(done)}/{args.requests} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s host-side, "
@@ -182,6 +236,37 @@ def main():
         want = {r.rid: r.out_tokens for r in ref_done}
         assert got == want, "paged outputs diverge from contiguous oracle"
         print(f"  compare-contiguous: {total} tokens byte-identical")
+    if args.compare_single_device:
+        if mesh is None:
+            raise SystemExit("--compare-single-device requires --mesh-model")
+        ref_srv, ref_done, _ = _serve(model, params, prompts, args.max_new,
+                                      args, paged=args.paged, mesh=None,
+                                      prepared=prepared)
+        got = {r.rid: r.out_tokens for r in done}
+        want = {r.rid: r.out_tokens for r in ref_done}
+        assert got == want, \
+            f"tp{args.mesh_model} tokens diverge from single-device"
+        print(f"  compare-single-device: {total} tokens byte-identical "
+              f"at tp={args.mesh_model}")
+    if args.require_warm:
+        from repro import tune
+        problems = []
+        if tune.stats["misses"]:
+            problems.append(
+                f"{tune.stats['misses']} schedule-cache misses fell back to "
+                f"defaults:\n    " + "\n    ".join(sorted(tune._warned_keys)))
+        if prepared is not None and prepared.recomputed:
+            problems.append(
+                f"prepared artifact recomputed offline work: "
+                f"{prepared.recompute_report()}")
+        if problems:
+            print("--require-warm: FAIL\n  " + "\n  ".join(problems),
+                  file=sys.stderr)
+            raise SystemExit(1)
+        checks = ["0 schedule misses"]
+        if prepared is not None:
+            checks.append("prepared.recomputed == 0")
+        print(f"  require-warm: {', '.join(checks)}")
     print("OK")
 
 

@@ -97,6 +97,10 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-cached", action="store_true",
                     help="fail if anything had to be measured (warm-cache "
                          "assertion for CI)")
+    ap.add_argument("--refresh-artifact", default=None, metavar="DIR",
+                    help="after tuning, re-slice this repro.prepare "
+                         "artifact's schedule from the cache and re-save it "
+                         "(ships fresh schedules with the prepared weights)")
     args = ap.parse_args(argv)
 
     m_values = [int(x) for x in args.m.split(",") if x]
@@ -183,6 +187,18 @@ def main(argv=None) -> int:
         print("--expect-cached: FAIL — warm cache still measured",
               file=sys.stderr)
         return 1
+    if args.refresh_artifact:
+        from repro import prepare
+        from repro.kernels import compat
+        pm = prepare.load(args.refresh_artifact)
+        # re-slice for THIS device (the one we just tuned on) and re-stamp —
+        # this is also the sanctioned way to re-home an artifact whose
+        # schedule slice was dropped on a foreign device_kind.
+        pm.device = compat.device_kind()
+        pm.schedule = cache.entries_for_device(pm.device)
+        pm.save(args.refresh_artifact)
+        print(f"refreshed {args.refresh_artifact}: "
+              f"{len(pm.schedule)} schedule entries for {pm.device}")
     return 0
 
 

@@ -119,6 +119,10 @@ def main(argv=None) -> int:
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--expect-cached", action="store_true",
                     help="--tune: fail if anything had to be measured")
+    ap.add_argument("--prepared", default=None, metavar="DIR",
+                    help="run from a repro.prepare vision artifact "
+                         "(python -m repro.launch.prepare --vision ...) "
+                         "instead of quantizing in-process")
     args = ap.parse_args(argv)
     _smoke_defaults(args)
 
@@ -137,6 +141,16 @@ def main(argv=None) -> int:
 
     key = jax.random.PRNGKey(0)
     params = vm.init_params(model, key)
+    prepared = None
+    if args.prepared:
+        from repro import prepare
+        prepared = prepare.load(args.prepared)
+        if prepared.kind != "vision":
+            raise SystemExit(f"--prepared: {args.prepared} is a "
+                             f"{prepared.kind!r} artifact, not vision")
+        if args.quantized and not prepared.quantized:
+            raise SystemExit("--quantized with a float-only artifact — "
+                             "re-run launch.prepare with --quantized")
     x = jax.random.normal(jax.random.PRNGKey(1),
                           (args.batch, image_size, image_size, 3))
     n_convs = len(vm.conv_layers(model))
@@ -151,8 +165,12 @@ def main(argv=None) -> int:
 
     cfg = GemmConfig(algo=args.algo, impl=args.gemm_impl,
                      quantized=args.quantized, block=gemm_block)
-    run_params = (vm.attach_quantized(model, params) if args.quantized
-                  else params)
+    if prepared is not None:
+        run_params = prepared.params
+    elif args.quantized:
+        run_params = vm.attach_quantized(model, params)
+    else:
+        run_params = params
     with use_gemm(cfg):
         t0 = time.perf_counter()
         logits = vm.apply(model, run_params, x)
@@ -172,6 +190,10 @@ def main(argv=None) -> int:
     limit = 0.35 if args.quantized else 1e-3
     if rel > limit:
         print(f"FAIL: rel err {rel:.4f} > {limit}", file=sys.stderr)
+        return 1
+    if prepared is not None and prepared.recomputed:
+        print(f"FAIL: prepared artifact recomputed offline work: "
+              f"{prepared.recompute_report()}", file=sys.stderr)
         return 1
     print("OK")
     return 0

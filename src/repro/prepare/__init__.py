@@ -1,0 +1,22 @@
+"""`repro.prepare` — unified offline model preparation (§4.4, offline).
+
+One interface over every offline transform the serving/vision paths need —
+per-channel int8 weight encoding with Eq. 15 folded beta + colsums, Eq. 9
+FFIP y-deltas, folded BN, and the device-keyed `repro.tune` schedule slice —
+serializable to a single artifact directory with a counter-proved
+zero-recompute warm start. See :mod:`repro.prepare.artifact`.
+
+    pm = prepare.prepare_lm(params, quantized=True)
+    pm.save("artifacts/minicpm")
+    ...
+    pm = prepare.load("artifacts/minicpm")     # new process
+    assert pm.recomputed == 0                  # nothing re-derived
+
+CLI: ``python -m repro.launch.prepare``.
+"""
+from repro.prepare.artifact import (ArtifactError, PreparedModel,
+                                    counters_snapshot, load, prepare_lm,
+                                    prepare_vision)
+
+__all__ = ["ArtifactError", "PreparedModel", "counters_snapshot", "load",
+           "prepare_lm", "prepare_vision"]

@@ -1,0 +1,377 @@
+"""`PreparedModel` — the serializable offline-prep artifact.
+
+The paper's §4.4 point is that everything expensive about deploying a
+quantized FFIP model is *offline* work: per-channel int8 weight encoding with
+beta folded into the integer bias (Eq. 15) and colsums precomputed, the Eq. 9
+y-delta encoding of the weights, BN folding for the vision stacks, and — in
+this codebase — the `repro.tune` schedule measurements. Before this module
+those transforms lived in four unrelated places and none survived a process
+restart. `PreparedModel` owns all of them behind one interface and serializes
+to a single directory (atomic tmp-dir + rename, `ckpt/manager.py`-style;
+the `computation_cache` / `expected_weights_desc` idiom from ideep is the
+reference shape).
+
+Warm-start contract (counter-proved, tests/test_prepare.py + CI smoke):
+loading an artifact and serving from it performs **zero** re-quantization
+(`core.quant.counters`), zero y re-encoding (`kernels.compat.derived.stats`
+— loads are seeded into the shared per-weight memo), and zero tuning
+measurements (`tune.measure.counters`); ``prepared.recomputed`` sums the
+deltas since load and must stay 0.
+
+Portability: the tuned schedule slice is keyed by ``device_kind`` and only
+rides on matching hardware — loading under a different device kind keeps the
+quantized weights and y-deltas (they are device-independent integer math) but
+drops the schedule slice with a one-time warning. A corrupt artifact is
+quarantined to ``<dir>.corrupt`` exactly like `tune/cache.py` quarantines its
+JSON file, so a bad fleet push is debuggable instead of crash-looping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import tune
+from repro.core import fip, quant
+from repro.kernels import compat
+from repro.kernels.ffip_gemm import Y_TAG
+from repro.tune import measure
+
+log = logging.getLogger("repro.prepare")
+
+_VERSION = 1
+_MANIFEST = "manifest.json"
+
+# one-time-warning memory for schedule-slice drops (per artifact+device pair)
+_warned_drops: set = set()
+
+
+class ArtifactError(RuntimeError):
+    """A prepared artifact is missing or corrupt (corrupt => quarantined)."""
+
+
+def counters_snapshot() -> Dict[str, int]:
+    """Current offline-work counters: quantization runs, y encodings, tuning
+    measurements. `PreparedModel.recomputed` is the delta since construction
+    — the zero-recompute warm-start proof reads it."""
+    return {
+        "quantize": quant.counters["prepare_dense"],
+        "y_encode": compat.derived.stats["computed"],
+        "tune": measure.counters["timed_candidates"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Structure codec: params trees are dicts/lists/tuples of arrays plus python
+# scalars (the conv q entries carry k_real/kh/kw/groups ints that must stay
+# python ints — they drive static kernel geometry). Arrays go to .npy files;
+# the structure itself goes into the manifest, so load needs NO template and
+# therefore no recompute to build one.
+# ---------------------------------------------------------------------------
+
+def _encode(obj: Any, leaves: list) -> dict:
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, dict):
+        keys = list(obj.keys())
+        if not all(isinstance(k, str) for k in keys):
+            raise TypeError(f"artifact dicts need str keys, got {keys!r}")
+        return {"t": "dict", "k": keys,
+                "v": [_encode(obj[k], leaves) for k in keys]}
+    if isinstance(obj, (list, tuple)):
+        return {"t": "list" if isinstance(obj, list) else "tuple",
+                "v": [_encode(x, leaves) for x in obj]}
+    if isinstance(obj, (bool, int, float, str)) and not hasattr(obj, "shape"):
+        return {"t": "py", "v": obj}
+    leaves.append(np.asarray(obj))
+    return {"t": "arr", "i": len(leaves) - 1}
+
+
+def _decode(node: dict, leaves: list) -> Any:
+    t = node["t"]
+    if t == "none":
+        return None
+    if t == "dict":
+        return {k: _decode(v, leaves) for k, v in zip(node["k"], node["v"])}
+    if t in ("list", "tuple"):
+        seq = [_decode(v, leaves) for v in node["v"]]
+        return seq if t == "list" else tuple(seq)
+    if t == "py":
+        return node["v"]
+    if t == "arr":
+        return jnp.asarray(leaves[node["i"]])
+    raise ValueError(f"unknown artifact node type {t!r}")
+
+
+def _iter_dense_w(node: Any, path: Tuple[str, ...] = ()
+                  ) -> Iterator[Tuple[str, Any]]:
+    """Yield ("a/b/w", w) for every even-K dense weight in the tree — the
+    leaves eligible for the Eq. 9 y-delta precompute. Leading dims are
+    stacked layer groups (the transformer scans over them)."""
+    if isinstance(node, dict):
+        w = node.get("w")
+        if (w is not None and not isinstance(w, (dict, list, tuple))
+                and getattr(w, "ndim", 0) >= 2 and w.shape[-2] % 2 == 0):
+            yield "/".join(path + ("w",)), w
+        for k, v in node.items():
+            yield from _iter_dense_w(v, path + (str(k),))
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            yield from _iter_dense_w(v, path + (str(i),))
+
+
+def _make_y_nd(w):
+    """Eq. 9 y encoding; leading stacked-layer dims are mapped over."""
+    if w.ndim == 2:
+        return fip.make_y(w)
+    flat = w.reshape((-1,) + w.shape[-2:])
+    return jax.vmap(fip.make_y)(flat).reshape(w.shape)
+
+
+def _leaf_at(tree: Any, path: str) -> Optional[Any]:
+    node = tree
+    for seg in path.split("/"):
+        if isinstance(node, dict):
+            if seg not in node:
+                return None
+            node = node[seg]
+        elif isinstance(node, (list, tuple)):
+            try:
+                node = node[int(seg)]
+            except (ValueError, IndexError):
+                return None
+        else:
+            return None
+    return node
+
+
+# ---------------------------------------------------------------------------
+# The artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PreparedModel:
+    """Run-ready offline-prepared model: params with int8 ``q`` entries
+    attached, precomputed y-deltas, and the device-keyed schedule slice.
+
+    ``params`` is the full tree (float weights retained for the float path,
+    logits, fallbacks), so the artifact is a self-contained deployable.
+    ``derived`` maps ``"path/to/w"`` -> Eq. 9 y-delta array; on load it is
+    seeded into the shared per-weight memo so eager FFIP kernels never
+    re-encode. ``schedule`` is the `repro.tune` entries slice for ``device``.
+    """
+    kind: str                               # "lm" | "vision"
+    device: str                             # device_kind at prepare time
+    quantized: bool
+    params: Any
+    derived: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schedule: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # snapshot of the global offline-work counters at construction/load time;
+    # all PreparedModels in a process share the underlying counters, so the
+    # delta is "offline work done anywhere since this artifact became ready".
+    baseline: Dict[str, int] = dataclasses.field(
+        default_factory=counters_snapshot)
+
+    @property
+    def recomputed(self) -> int:
+        """Offline transforms recomputed since this artifact was prepared or
+        loaded. The warm-start contract is ``recomputed == 0``."""
+        return sum(self.recompute_report().values())
+
+    def recompute_report(self) -> Dict[str, int]:
+        now = counters_snapshot()
+        return {k: now[k] - self.baseline[k] for k in now}
+
+    # -- persistence -------------------------------------------------------
+    def save(self, directory, *, overwrite: bool = True) -> Path:
+        """Atomic directory write: everything lands in ``<dir>.tmp`` first,
+        then one rename commits — a killed writer can't leave a torn
+        artifact at the final path."""
+        final = Path(directory)
+        tmp = final.with_name(final.name + ".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves: list = []
+        tree = _encode({"params": self.params, "derived": self.derived},
+                       leaves)
+        for i, arr in enumerate(leaves):
+            np.save(tmp / f"arr_{i:05d}.npy", arr)
+        manifest = {
+            "version": _VERSION,
+            "kind": self.kind,
+            "device": self.device,
+            "quantized": self.quantized,
+            "schedule": self.schedule,
+            "meta": self.meta,
+            "tree": tree,
+            "n_arrays": len(leaves),
+            "time": time.time(),
+        }
+        (tmp / _MANIFEST).write_text(json.dumps(manifest) + "\n")
+        if final.exists():
+            if not overwrite:
+                raise FileExistsError(f"artifact already exists at {final}")
+            shutil.rmtree(final)
+        tmp.rename(final)
+        return final
+
+
+def load(directory, *, device: Optional[str] = None) -> PreparedModel:
+    """Load an artifact with the zero-recompute guarantee.
+
+    Same ``device_kind``: the schedule slice is installed into the process
+    tune cache (in-memory — the user's cache file is not rewritten), so
+    ``block="auto"`` lookups hit without re-measuring. Different kind: the
+    slice is dropped with a one-time warning; weights/y-deltas still load.
+    Corruption quarantines the directory to ``<dir>.corrupt`` and raises
+    :class:`ArtifactError`.
+    """
+    path = Path(directory)
+    try:
+        manifest = json.loads((path / _MANIFEST).read_text())
+        if manifest.get("version") != _VERSION:
+            raise ValueError(
+                f"artifact version {manifest.get('version')!r} != {_VERSION}")
+        if manifest.get("kind") not in ("lm", "vision"):
+            raise ValueError(f"bad artifact kind {manifest.get('kind')!r}")
+        n = int(manifest["n_arrays"])
+        leaves = [np.load(path / f"arr_{i:05d}.npy") for i in range(n)]
+        obj = _decode(manifest["tree"], leaves)
+        params, derived = obj["params"], obj["derived"]
+    except ArtifactError:
+        raise
+    except Exception as e:
+        if path.exists():
+            corrupt = path.with_name(path.name + ".corrupt")
+            shutil.rmtree(corrupt, ignore_errors=True)
+            where = ""
+            try:
+                path.rename(corrupt)
+                where = f" (quarantined to {corrupt})"
+            except OSError:
+                pass
+            raise ArtifactError(
+                f"corrupt prepared artifact at {path}{where}: {e}") from e
+        raise ArtifactError(f"no prepared artifact at {path}") from e
+
+    dev = device or compat.device_kind()
+    schedule = manifest.get("schedule") or {}
+    if manifest["device"] != dev:
+        if schedule:
+            key = (str(path), manifest["device"], dev)
+            if key not in _warned_drops:
+                _warned_drops.add(key)
+                log.warning(
+                    "prepared artifact %s was tuned for device_kind=%r but "
+                    "this process runs %r: dropping its %d schedule entries "
+                    "(weights/y-deltas still apply; re-tune with "
+                    "`python -m repro.launch.tune` for this device)",
+                    path, manifest["device"], dev, len(schedule))
+            schedule = {}
+    elif schedule:
+        tune.get_cache().merge_entries(schedule)
+
+    # Seed the shared per-weight memo so eager FFIP GEMMs over these exact
+    # loaded arrays are warm-start hits, never re-encodes.
+    for wpath, y in derived.items():
+        w = _leaf_at(params, wpath)
+        if w is not None and getattr(w, "shape", None) == y.shape:
+            compat.derived.seed(Y_TAG, w, y)
+
+    return PreparedModel(
+        kind=manifest["kind"], device=manifest["device"],
+        quantized=bool(manifest["quantized"]), params=params,
+        derived=derived, schedule=schedule, meta=manifest.get("meta") or {})
+
+
+# ---------------------------------------------------------------------------
+# Builders — the one interface every former private prep path now routes
+# through (serve/batcher, vision.attach_quantized, launch CLIs).
+# ---------------------------------------------------------------------------
+
+def prepare_lm(params, *, quantized: bool = True, dtype=jnp.int8,
+               y_deltas: bool = True, device: Optional[str] = None,
+               name: Optional[str] = None) -> PreparedModel:
+    """Prepare a language-model param tree for serving.
+
+    * ``quantized``: attach per-channel int8 ``q`` entries (Eq. 15 folded
+      beta + colsums + Eq. 20 zero-points) next to every even-K dense ``w``;
+    * ``y_deltas``: precompute the Eq. 9 y encoding for every 2-D even-K
+      dense weight (the float Pallas FFIP operand), memoized into the shared
+      per-weight cache so the serving process reuses them immediately;
+    * the current `repro.tune` schedule slice for ``device`` rides along.
+    """
+    dev = device or compat.device_kind()
+    p = quant.attach_quantized_weights(params, dtype=dtype) \
+        if quantized else params
+    derived: Dict[str, Any] = {}
+    if y_deltas:
+        for wpath, w in _iter_dense_w(p):
+            derived[wpath] = compat.derived.get(Y_TAG, w, _make_y_nd)
+    schedule = tune.get_cache().entries_for_device(dev)
+    return PreparedModel(kind="lm", device=dev, quantized=quantized,
+                         params=p, derived=derived, schedule=schedule,
+                         meta={"name": name, "dtype": jnp.dtype(dtype).name,
+                               "y_deltas": y_deltas})
+
+
+def prepare_vision(model, params, *, quantized: bool = True, dtype=jnp.int8,
+                   bn_stats=None, device: Optional[str] = None,
+                   name: Optional[str] = None) -> PreparedModel:
+    """Prepare a vision model (layer-descriptor list + parallel param list).
+
+    Owns the whole offline chain: optional BN folding into the conv weights
+    (``bn_stats``: per-layer dict of gamma/beta/mean/var or None, parallel to
+    ``params``), then per-layer int8 quantization — convs through the fused
+    implicit-im2col q entry (flattened KH*KW*Cin_g axis), even-K FCs through
+    the serving dense q entry. ``vision.models.attach_quantized`` is now a
+    thin wrapper over this function.
+    """
+    from repro.vision import layers as vl
+    from repro.vision import models as vm
+
+    dev = device or compat.device_kind()
+    p = list(params)
+    folded = 0
+    if bn_stats is not None:
+        if len(bn_stats) != len(p):
+            raise ValueError("bn_stats must be parallel to params")
+        p = [vl.fold_bn(lp, bn) if bn is not None else lp
+             for lp, bn in zip(p, bn_stats)]
+        folded = sum(1 for bn in bn_stats if bn is not None)
+
+    if quantized:
+        out: list = []
+        for layer, lp in zip(model, p):
+            if isinstance(layer, vm.Conv):
+                out.append(vl.attach_quantized_conv(
+                    lp, groups=layer.groups, dtype=dtype))
+            elif isinstance(layer, vm.FC):
+                out.append(vl.attach_quantized_fc(lp, dtype=dtype))
+            elif isinstance(layer, vm.Bottleneck):
+                entry = dict(lp)
+                for field in ("c1", "c2", "c3", "proj"):
+                    conv = getattr(layer, field)
+                    if conv is not None:
+                        entry[field] = vl.attach_quantized_conv(
+                            lp[field], groups=conv.groups, dtype=dtype)
+                out.append(entry)
+            else:
+                out.append(lp)
+        p = out
+
+    schedule = tune.get_cache().entries_for_device(dev)
+    return PreparedModel(kind="vision", device=dev, quantized=quantized,
+                         params=p, derived={}, schedule=schedule,
+                         meta={"name": name, "dtype": jnp.dtype(dtype).name,
+                               "bn_folded": folded})

@@ -62,8 +62,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
 from repro.core.gemm import GemmConfig, use_gemm
+from repro.dist import context as dist_context
+from repro.dist import sharding as dist_sharding
 from repro.models.model import Model
 from repro.models.transformer import paged_cache_supported
 from repro.serve.paged import (PageAllocator, PrefixIndex, page_keys,
@@ -150,16 +151,44 @@ class BatchServer:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  paged_attention: str = "gather",
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, mesh=None,
+                 moe_partition: str = "expert", prepared=None):
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        if mesh is not None and paged:
+            raise NotImplementedError(
+                "paged=True with mesh= is not supported yet (the page pool "
+                "is host-managed per device); use the contiguous cache for "
+                "tensor-parallel serving")
+        if prepared is not None:
+            if prepared.kind != "lm":
+                raise ValueError(
+                    f"BatchServer needs an 'lm' artifact, got "
+                    f"{prepared.kind!r}")
+            if quantized and not prepared.quantized:
+                raise ValueError(
+                    "quantized=True but the prepared artifact carries no "
+                    "int8 weights — re-run `python -m repro.launch.prepare "
+                    "--quantized`")
         self.model = model
         self.b = batch_slots
         self.max_len = max_len
         self.decode_chunk = decode_chunk
         self.paged = paged
+        # dist x serve: `mesh` turns on tensor-parallel decode. Params and
+        # cache are placed through the repro.dist rule engine (column/row-
+        # parallel projections + KV-head sharding on the "model" axis,
+        # expert- or ffn-parallel MoE banks per `moe_partition`) and every
+        # dispatch traces under the ambient mesh so flash attention's
+        # shard_map engages. The specs never split a kernel's K contraction
+        # in integer paths, so int8-FFIP decode stays bit-exact; output
+        # TOKENS are identical to single-device for float too (launch/serve
+        # --compare-single-device asserts it end to end).
+        self.mesh = mesh
+        self.moe_partition = moe_partition
+        self.prepared = prepared
         self.slots = [_Slot() for _ in range(batch_slots)]
         self._queue: "collections.deque[Request]" = collections.deque()
         self._completed: List[Request] = []
@@ -210,6 +239,11 @@ class BatchServer:
                                                           max_len))
             self._batch_axes = (None if self._bucketed else
                                 _cache_batch_axes(model, batch_slots, max_len))
+            if mesh is not None:
+                specs = dist_sharding.cache_specs(self.cache, mesh,
+                                                  batch=batch_slots)
+                self.cache = jax.device_put(
+                    self.cache, dist_sharding.to_named(specs, mesh))
         # GEMM provider scope for the whole serving forward. ``gemm_impl``
         # ("pallas") routes the projections through the Pallas kernels and
         # ``gemm_block`` ("auto" / explicit (bm,bn,bk)) picks their tiling
@@ -235,6 +269,8 @@ class BatchServer:
             self._gemm_cfg = None
         self._qparams = None
         self._qparams_src = None
+        self._placed = None
+        self._placed_src = None
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
         # bucketed: one jit entry per power-of-2 prompt bucket.
         # fallback: batch-1 prefill scattered into the slot's cache rows
@@ -261,23 +297,49 @@ class BatchServer:
                 "prefix_hit_tokens": 0, "cow_copies": 0,
                 "pages_in_use": 0, "pages_peak": 0}
 
-    # -- quantized decode mode --------------------------------------------
+    # -- quantized decode mode / mesh scope --------------------------------
     def _gemm_scope(self):
-        """Trace/serving-time GEMM provider scope (FFIP int8 when quantized)."""
-        if self._gemm_cfg is None:
-            return contextlib.nullcontext()
-        return use_gemm(self._gemm_cfg)
+        """Trace/serving-time scope around every dispatch: the GEMM provider
+        (FFIP int8 when quantized) plus, under ``mesh=``, the ambient dist
+        mesh so tuned-flash shard_map and NamedSharding resolution engage at
+        trace time."""
+        stack = contextlib.ExitStack()
+        if self.mesh is not None:
+            stack.enter_context(dist_context.mesh_context(self.mesh))
+        if self._gemm_cfg is not None:
+            stack.enter_context(use_gemm(self._gemm_cfg))
+        return stack
 
     def _params_for(self, params):
-        """Float path: passthrough. Quantized: attach the offline int8 weight
-        tree (per-channel scales/zero-points, Eq. 15 folded beta, colsums)
-        once per distinct params object."""
-        if self._gemm_cfg is None:
-            return params
-        if self._qparams_src is not params:
-            self._qparams = quant.attach_quantized_weights(params)
-            self._qparams_src = params
-        return self._qparams
+        """Resolve the run-ready param tree for a dispatch.
+
+        Preference order: an injected ``prepared`` artifact (warm start —
+        zero re-quantization/re-encode, `repro.prepare`'s counters prove it);
+        else, when a GEMM config is active, a `prepare.prepare_lm` tree built
+        once per distinct params object (the former private attach path,
+        now a thin wrapper over repro.prepare); else the float params as-is.
+        Under ``mesh=`` the result is placed through dist.param_specs once
+        per distinct tree."""
+        if self.prepared is not None:
+            p = self.prepared.params
+        elif self._gemm_cfg is None:
+            p = params
+        else:
+            if self._qparams_src is not params:
+                from repro import prepare
+                self._qparams = prepare.prepare_lm(
+                    params, quantized=True, y_deltas=False).params
+                self._qparams_src = params
+            p = self._qparams
+        if self.mesh is not None:
+            if self._placed_src is not p:
+                specs = dist_sharding.param_specs(
+                    p, self.mesh, moe_partition=self.moe_partition)
+                self._placed = jax.device_put(
+                    p, dist_sharding.to_named(specs, self.mesh))
+                self._placed_src = p
+            p = self._placed
+        return p
 
     # -- device programs ---------------------------------------------------
     def _decode_impl(self, params, last, cache, pos, live, rem, eos):

@@ -159,6 +159,35 @@ class ScheduleCache:
             self._load_locked()
             return sorted(self._entries)
 
+    # -- artifact integration (repro.prepare) ------------------------------
+    def entries_for_device(self, device: str) -> Dict[str, dict]:
+        """Deep-copied slice of entries keyed to one ``device_kind`` — the
+        export path: ``repro.prepare`` bundles this slice with the weights so
+        a warm start on the same device kind never re-tunes."""
+        with self._lock:
+            self._load_locked()
+            return {k: json.loads(json.dumps(v))
+                    for k, v in self._entries.items()
+                    if k.rsplit("|", 1)[-1] == device}
+
+    def merge_entries(self, entries: Dict[str, dict], *,
+                      persist: bool = False) -> int:
+        """Install a slice (e.g. from a loaded artifact) into this cache;
+        invalid entries are skipped, not fatal. Returns the count installed.
+        In-memory by default — artifact schedules don't overwrite the user's
+        cache file unless asked."""
+        n = 0
+        with self._lock:
+            self._load_locked()
+            for k, v in entries.items():
+                if isinstance(k, str) and _valid_entry(v):
+                    self._entries[k] = json.loads(json.dumps(v))
+                    self._touch_locked(k, self._entries[k])
+                    n += 1
+        if persist and n:
+            self.save()
+        return n
+
     def __len__(self) -> int:
         with self._lock:
             self._load_locked()

@@ -156,27 +156,12 @@ def apply(model: Sequence[Layer], params: Sequence, x: Array) -> Array:
 
 def attach_quantized(model: Sequence[Layer], params: Sequence,
                      dtype=jnp.int8) -> list:
-    """Offline int8 preparation for a whole vision model: convs get the
-    fused-conv q entry (folded beta + colsums on the flattened KH*KW*Cin_g
-    axis), even-K FCs get the serving-style dense q entry."""
-    out: list = []
-    for layer, p in zip(model, params):
-        if isinstance(layer, Conv):
-            out.append(vl.attach_quantized_conv(p, groups=layer.groups,
-                                                dtype=dtype))
-        elif isinstance(layer, FC):
-            out.append(vl.attach_quantized_fc(p, dtype=dtype))
-        elif isinstance(layer, Bottleneck):
-            entry = dict(p)
-            for field in ("c1", "c2", "c3", "proj"):
-                conv = getattr(layer, field)
-                if conv is not None:
-                    entry[field] = vl.attach_quantized_conv(
-                        p[field], groups=conv.groups, dtype=dtype)
-            out.append(entry)
-        else:
-            out.append(p)
-    return out
+    """Offline int8 preparation for a whole vision model — thin wrapper over
+    :func:`repro.prepare.prepare_vision`, which owns the transform (BN fold +
+    conv/FC quantization) and can serialize the result as an artifact."""
+    from repro import prepare
+    return prepare.prepare_vision(model, params, quantized=True,
+                                  dtype=dtype).params
 
 
 def conv_layers(model: Sequence[Layer]) -> List[Conv]:

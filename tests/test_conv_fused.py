@@ -214,16 +214,21 @@ def test_conv_rowsums_matches_materialized():
 def test_weight_derivations_memoized():
     """The offline transforms (group stack, K evenize, Eq. 9 y-deltas) are
     derived ONCE per weight array — a second eager forward reuses the exact
-    cached objects (the §4.4 deployment story, as in ffip_gemm's y memo)."""
+    cached objects from the SHARED per-weight memo (kernels/compat.py's
+    DerivedCache, the §4.4 deployment story — one cache for ffip_gemm and
+    the fused conv path alike)."""
+    from repro.kernels import compat
     x, kernel = _operands(8, 8, 4, 8, 3, 3, 1, jnp.float32)
-    cg._derived_cache.clear()
+    compat.derived.clear()
     cg.conv_gemm_fused(x, kernel, algo="ffip")
-    first = {k: v[1] for k, v in cg._derived_cache.items()}
+    first = {k: v[1] for k, v in compat.derived._cache.items()}
     assert len(first) >= 2                  # stack + y_even at minimum
+    computed = compat.derived.stats["computed"]
     cg.conv_gemm_fused(x, kernel, algo="ffip")
-    second = {k: v[1] for k, v in cg._derived_cache.items()}
+    second = {k: v[1] for k, v in compat.derived._cache.items()}
     assert second.keys() == first.keys()
     assert all(second[k] is first[k] for k in first)
+    assert compat.derived.stats["computed"] == computed  # pure hits
 
 
 def test_fused_conv_rejects_bad_shapes():

@@ -1,0 +1,221 @@
+"""repro.prepare artifact contract: save/load roundtrip, the zero-recompute
+warm-start guarantee (counter-proved), y-delta memo seeding, schedule-slice
+portability (foreign device_kind drops with a one-time warning), corruption
+quarantine, and the thin-wrapper equivalence of the legacy prep paths."""
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, prepare, tune
+from repro.core import fip
+from repro.kernels import compat
+from repro.kernels.ffip_gemm import Y_TAG, ffip_gemm
+from repro.models.model import build_model
+from repro.prepare import artifact as art
+from repro.serve.batcher import BatchServer, Request
+
+MAX_LEN = 48
+
+
+def _setup(arch="minicpm-2b", seed=0):
+    cfg = configs.smoke_config(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _serve_tokens(model, params, prompts, *, quantized=False, prepared=None):
+    srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN,
+                      quantized=quantized, prepared=prepared)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    done = srv.run_until_drained(params)
+    return {r.rid: tuple(r.out_tokens) for r in done}
+
+
+def _tiny_params():
+    k = jax.random.PRNGKey(3)
+    return {"lin": {"w": jax.random.normal(k, (8, 6)), "b": jnp.zeros((6,))}}
+
+
+# -- roundtrip + zero recompute ---------------------------------------------
+
+def test_roundtrip_bit_identical_and_zero_recompute(tmp_path):
+    _, _, params = _setup()
+    pm = prepare.prepare_lm(params, quantized=True)
+    assert pm.kind == "lm" and pm.quantized
+    assert pm.derived, "stacked dense weights should yield y-deltas"
+    out = pm.save(tmp_path / "art")
+    assert (out / "manifest.json").exists()
+
+    pm2 = prepare.load(tmp_path / "art")
+    assert pm2.recomputed == 0, pm2.recompute_report()
+    a = jax.tree.leaves(pm.params)
+    b = jax.tree.leaves(pm2.params)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # derived y-deltas survive too
+    assert set(pm2.derived) == set(pm.derived)
+
+
+def test_python_scalars_survive_roundtrip(tmp_path):
+    """Conv q entries carry static-geometry python ints (k_real/kh/kw/groups)
+    that must NOT come back as 0-d arrays — they drive kernel geometry."""
+    pm = art.PreparedModel(
+        kind="lm", device="cpu", quantized=False,
+        params={"meta": {"k_real": 27, "pad": (1, 2), "name": "c1",
+                         "flag": True}, "w": jnp.ones((4, 4))})
+    pm.save(tmp_path / "a")
+    p = prepare.load(tmp_path / "a").params
+    assert p["meta"]["k_real"] == 27 and type(p["meta"]["k_real"]) is int
+    assert p["meta"]["pad"] == (1, 2) and type(p["meta"]["pad"]) is tuple
+    assert p["meta"]["flag"] is True
+    assert p["meta"]["name"] == "c1"
+
+
+def test_loaded_artifact_serves_identically_warm(tmp_path):
+    """The tentpole contract end to end: tokens from a server fed a loaded
+    artifact match a cold in-process prep, with ZERO offline transforms
+    recomputed after load (quantize / y-encode / tune counters frozen)."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)) for n in (4, 7, 3)]
+
+    cold = _serve_tokens(model, params, prompts, quantized=True)
+    prepare.prepare_lm(params, quantized=True).save(tmp_path / "art")
+
+    pm = prepare.load(tmp_path / "art")
+    warm = _serve_tokens(model, params, prompts, quantized=True, prepared=pm)
+    assert warm == cold
+    assert pm.recomputed == 0, pm.recompute_report()
+
+
+def test_y_delta_seeding_makes_eager_ffip_warm(tmp_path):
+    """Loading seeds the shared per-weight memo: an eager FFIP GEMM over the
+    loaded weight is a HIT, never a re-encode."""
+    params = _tiny_params()
+    prepare.prepare_lm(params, quantized=False).save(tmp_path / "a")
+    pm = prepare.load(tmp_path / "a")
+    w = pm.params["lin"]["w"]
+    before = dict(compat.derived.stats)
+    a = jnp.ones((4, 8), jnp.float32)
+    got = ffip_gemm(a, w)
+    assert compat.derived.stats["computed"] == before["computed"]
+    assert compat.derived.stats["hits"] == before["hits"] + 1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ w),
+                               rtol=1e-5, atol=1e-5)
+    # and the seeded delta IS the Eq. 9 encoding
+    np.testing.assert_allclose(np.asarray(pm.derived["lin/w"]),
+                               np.asarray(fip.make_y(w)), rtol=1e-6)
+
+
+# -- schedule slice portability ---------------------------------------------
+
+_ENTRY = {"blocks": {"bm": 8, "bn": 128, "bk": 64}, "us": 10, "candidates": 2}
+
+
+def test_schedule_slice_rides_and_installs(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "sched.json"))
+    dev = compat.device_kind()
+    key = f"gemm|ffip|int8|m4|n128|k64|{dev}"
+    tune.get_cache().merge_entries({key: _ENTRY,
+                                    "gemm|ffip|int8|m4|n128|k64|other_dev":
+                                    _ENTRY})
+    pm = prepare.prepare_lm(_tiny_params(), quantized=False)
+    assert set(pm.schedule) == {key}, "slice must be device-keyed"
+    pm.save(tmp_path / "a")
+
+    # fresh process-like cache: point at an empty path, then load
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "fresh.json"))
+    pm2 = prepare.load(tmp_path / "a")
+    assert pm2.schedule == {key: _ENTRY}
+    assert tune.get_cache().lookup(key) == _ENTRY, \
+        "load must install the slice into the process tune cache"
+
+
+def test_foreign_device_drops_schedule_once(tmp_path, monkeypatch, caplog):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "sched.json"))
+    tune.get_cache().merge_entries(
+        {"gemm|ffip|int8|m4|n128|k64|faketpu_v9": _ENTRY})
+    pm = prepare.prepare_lm(_tiny_params(), quantized=True,
+                            device="faketpu_v9")
+    assert pm.schedule
+    pm.save(tmp_path / "a")
+
+    with caplog.at_level(logging.WARNING, logger="repro.prepare"):
+        pm2 = prepare.load(tmp_path / "a")
+        pm3 = prepare.load(tmp_path / "a")
+    # weights + y-deltas still load; only the schedule slice is dropped
+    assert pm2.quantized and pm2.schedule == {} and pm3.schedule == {}
+    drops = [r for r in caplog.records if "dropping" in r.message]
+    assert len(drops) == 1, "foreign-device drop must warn exactly once"
+
+
+# -- corruption quarantine ---------------------------------------------------
+
+def test_corrupt_artifact_quarantined(tmp_path):
+    bad = tmp_path / "art"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{not json")
+    with pytest.raises(prepare.ArtifactError, match="corrupt"):
+        prepare.load(bad)
+    assert not bad.exists()
+    assert (tmp_path / "art.corrupt" / "manifest.json").exists()
+
+
+def test_missing_artifact_raises_without_quarantine(tmp_path):
+    with pytest.raises(prepare.ArtifactError, match="no prepared artifact"):
+        prepare.load(tmp_path / "nope")
+    assert not (tmp_path / "nope.corrupt").exists()
+
+
+def test_save_is_atomic_under_overwrite(tmp_path):
+    pm = prepare.prepare_lm(_tiny_params(), quantized=False)
+    pm.save(tmp_path / "a")
+    pm.save(tmp_path / "a")          # overwrite in place
+    assert prepare.load(tmp_path / "a").recomputed == 0
+    with pytest.raises(FileExistsError):
+        pm.save(tmp_path / "a", overwrite=False)
+
+
+# -- legacy path equivalence --------------------------------------------------
+
+def test_batcher_quantized_path_is_prepare_lm():
+    """BatchServer's in-process quantized prep now routes through
+    repro.prepare and matches a direct prepare_lm tree."""
+    _, model, params = _setup()
+    srv = BatchServer(model, batch_slots=1, max_len=MAX_LEN, quantized=True)
+    got = srv._params_for(params)
+    want = prepare.prepare_lm(params, quantized=True, y_deltas=False).params
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_vision_attach_quantized_is_prepare_vision():
+    from repro.vision import models as vm
+    model = vm.build("alexnet", num_classes=10, image_size=67, width_div=8)
+    params = vm.init_params(model, jax.random.PRNGKey(0))
+    a = vm.attach_quantized(model, params)
+    b = prepare.prepare_vision(model, params, quantized=True).params
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_vision_artifact_roundtrip_preserves_static_geometry(tmp_path):
+    from repro.vision import models as vm
+    model = vm.build("alexnet", num_classes=10, image_size=67, width_div=8)
+    params = vm.init_params(model, jax.random.PRNGKey(0))
+    pm = prepare.prepare_vision(model, params, quantized=True)
+    pm.save(tmp_path / "v")
+    pm2 = prepare.load(tmp_path / "v")
+    assert pm2.kind == "vision" and pm2.recomputed == 0
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 67, 67, 3))
+    ref = vm.apply(model, pm.params, x)
+    got = vm.apply(model, pm2.params, x)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))

@@ -6,7 +6,13 @@ Runs the continuous batcher (float and int8-FFIP quantized modes) over a
 stream of mixed-length requests, sweeping the fused-decode ``decode_chunk``
 knob, and writes ``benchmarks/BENCH_serve.json``: tok/s, steps/s, the
 prefill / decode / host-overhead split from BatchServer.stats, per-step host
-transfer, TTFT, and compile counts.
+transfer, TTFT, e2e p50/p99 request latency, and compile counts.
+
+``results_faults`` drives the multi-replica router with 1-of-3 replicas
+flapping on a seeded FaultPlan (raise/hang, fake clock) and records outcome
+counts, retries/failovers/quarantines, and the e2e latency tax of failover
+vs the identical fleet with no faults — asserting every completion stays
+token-identical to the no-fault run (``--skip-faults`` skips it).
 
 Jit warmup runs OUTSIDE the timed region (a covering workload — every prompt
 bucket plus a decode dispatch — compiles first; its wall time is reported
@@ -75,28 +81,28 @@ BASELINE_PR2 = [
 ]
 
 # Contiguous-cache numbers measured in this container immediately before the
-# block-paged KV cache landed (same sweep, same workload/seed as below), so
-# the paged refactor's effect on the untouched contiguous hot path stays
+# multi-replica router landed (same sweep, same workload/seed as below), so
+# the router refactor's effect on the untouched single-server hot path stays
 # auditable: the contiguous sweep in ``results`` should match these within
 # CPU noise.
 BASELINE_PREV = [
-    {"mode": "float", "decode_chunk": 1, "tok_per_s": 2061.37,
-     "steps_per_s": 993.5, "decode_ms_per_step": 1.01,
+    {"mode": "float", "decode_chunk": 1, "tok_per_s": 2282.0,
+     "steps_per_s": 1045.13, "decode_ms_per_step": 0.96,
      "host_bytes_per_step": 16.0},
-    {"mode": "float", "decode_chunk": 2, "tok_per_s": 2189.6,
-     "steps_per_s": 1065.69, "decode_ms_per_step": 0.94,
+    {"mode": "float", "decode_chunk": 2, "tok_per_s": 2682.74,
+     "steps_per_s": 1372.14, "decode_ms_per_step": 0.73,
      "host_bytes_per_step": 21.3},
-    {"mode": "float", "decode_chunk": 4, "tok_per_s": 2299.35,
-     "steps_per_s": 1485.75, "decode_ms_per_step": 0.67,
+    {"mode": "float", "decode_chunk": 4, "tok_per_s": 2423.44,
+     "steps_per_s": 1138.85, "decode_ms_per_step": 0.88,
      "host_bytes_per_step": 21.3},
-    {"mode": "float", "decode_chunk": 8, "tok_per_s": 2123.7,
-     "steps_per_s": 1113.79, "decode_ms_per_step": 0.9,
+    {"mode": "float", "decode_chunk": 8, "tok_per_s": 2772.5,
+     "steps_per_s": 1460.74, "decode_ms_per_step": 0.68,
      "host_bytes_per_step": 42.7},
-    {"mode": "int8-ffip", "decode_chunk": 1, "tok_per_s": 1217.39,
-     "steps_per_s": 674.91, "decode_ms_per_step": 1.48,
+    {"mode": "int8-ffip", "decode_chunk": 1, "tok_per_s": 1096.68,
+     "steps_per_s": 630.68, "decode_ms_per_step": 1.59,
      "host_bytes_per_step": 16.0},
-    {"mode": "int8-ffip", "decode_chunk": 4, "tok_per_s": 1316.58,
-     "steps_per_s": 1047.88, "decode_ms_per_step": 0.95,
+    {"mode": "int8-ffip", "decode_chunk": 4, "tok_per_s": 1533.34,
+     "steps_per_s": 1471.05, "decode_ms_per_step": 0.68,
      "host_bytes_per_step": 21.3},
 ]
 
@@ -161,6 +167,9 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
     warm = _workload(2, seed)
     t0 = time.perf_counter()
     for r in warm:
+        # request ids are idempotency keys now: the warmup run must not
+        # collide with the timed run's rids (same rid => same payload)
+        r.rid += 1_000_000
         srv.submit(r)
     srv.run_until_drained(params)
     compile_s = time.perf_counter() - t0
@@ -177,6 +186,7 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
 
     total = sum(len(r.out_tokens) for r in done)
     ttft = [r.t_first - r.t_submit for r in done]
+    e2e = np.array(sorted(r.t_done - r.t_submit for r in done))
     st = srv.stats
     steps = st["steps"]
     out = {
@@ -208,6 +218,9 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
         # queue wait + prefill until the first token, per request
         "ttft_ms": {"mean": round(1e3 * sum(ttft) / len(ttft), 2),
                     "max": round(1e3 * max(ttft), 2)},
+        # submit -> last token, per request (queue wait included)
+        "e2e_ms": {"p50": round(1e3 * float(np.percentile(e2e, 50)), 2),
+                   "p99": round(1e3 * float(np.percentile(e2e, 99)), 2)},
         # on-device sampling: ids, not logits, cross per decode step
         "host_bytes_per_step": round(st["host_bytes_decode"] / max(steps, 1), 1),
         "host_bytes_per_step_pr2": slots * cfg.vocab * 4,   # (B, V) f32 logits
@@ -296,6 +309,68 @@ def bench_prepared(arch: str, *, slots: int, requests: int, max_new: int,
     }
 
 
+def bench_faults(arch: str, *, slots: int, requests: int, max_new: int,
+                 max_len: int) -> dict:
+    """Fault-tolerance section: 3 replicas, replica 0 flapping on a seeded
+    plan (raise/hang alternating, fake clock), vs the same fleet with no
+    faults. Records outcome counts, retries/failovers, e2e p50/p99 (fake
+    seconds — queue wait + retries dominate, which is the point), and
+    asserts every completion is token-identical to the no-fault run."""
+    from repro.serve.faults import FakeClock, FaultPlan
+    from repro.serve.lifecycle import Lifecycle
+    from repro.serve.router import ReplicaRouter, RouterConfig
+
+    cfg = configs.smoke_config(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(plan):
+        servers = [BatchServer(model, batch_slots=slots, max_len=max_len)
+                   for _ in range(3)]
+        rt = ReplicaRouter(
+            servers, params, fault_plan=plan, clock=FakeClock(),
+            cfg=RouterConfig(step_timeout_s=5.0, quarantine_s=0.2,
+                             max_retries=4))
+        t0 = time.perf_counter()
+        for r in _requests(cfg, requests, max_new, 0):
+            rt.submit(r)
+        recs = rt.drive(max_ticks=20_000)
+        wall = time.perf_counter() - t0
+        done = [rec for rec in recs.values()
+                if rec.state is Lifecycle.DONE]
+        lat = np.array(sorted(rec.t_done - rec.t_submit for rec in done))
+        return recs, rt, wall, lat
+
+    quiet_plan = FaultPlan([], seed=0)
+    flaky_plan = FaultPlan.flaky_replica(0, start=2, period=4, rounds=4,
+                                         seed=0)
+    ref, _, quiet_wall, quiet_lat = run(quiet_plan)
+    recs, rt, wall, lat = run(flaky_plan)
+    for rid, rec in recs.items():
+        assert rec.terminal, f"rid {rid} not terminal under faults"
+        if rec.state is Lifecycle.DONE:
+            assert rec.tokens == ref[rid].tokens, \
+                f"rid {rid} diverges from the no-fault fleet"
+    return {
+        "arch": cfg.name,
+        "fleet": {"replicas": 3, "flaky": "replica 0 (raise/hang, "
+                                          "4 rounds, period 4)"},
+        "plan": json.loads(flaky_plan.to_json()),
+        "outcomes": rt.outcome_counts(),
+        "router": dict(rt.stats),
+        "wall_s": round(wall, 3),
+        "wall_s_no_fault": round(quiet_wall, 3),
+        # fake-clock seconds: queue wait + backoff + failover, not compute
+        "e2e_fake_s": {
+            "no_fault": {"p50": round(float(np.percentile(quiet_lat, 50)), 3),
+                         "p99": round(float(np.percentile(quiet_lat, 99)), 3)},
+            "flaky": {"p50": round(float(np.percentile(lat, 50)), 3),
+                      "p99": round(float(np.percentile(lat, 99)), 3)},
+        },
+        "tokens_identical_to_no_fault": True,
+    }
+
+
 def bench_tp(arch: str, *, slots: int, requests: int, max_new: int,
              max_len: int) -> list:
     """Tensor-parallel decode sweep: ms/step at model-parallel 1/2/4 over
@@ -357,6 +432,8 @@ def main():
                     help="skip the prepared-artifact warm-start section")
     ap.add_argument("--skip-tp", action="store_true",
                     help="skip the tensor-parallel decode sweep")
+    ap.add_argument("--skip-faults", action="store_true",
+                    help="skip the flaky-replica router section")
     args = ap.parse_args()
     gemm_block = args.gemm_block
     if gemm_block and gemm_block != "auto":
@@ -438,6 +515,9 @@ def main():
     results_tp = [] if args.skip_tp else bench_tp(
         args.arch, slots=args.slots, requests=args.requests,
         max_new=args.max_new, max_len=args.max_len)
+    results_faults = {} if args.skip_faults else bench_faults(
+        args.arch, slots=args.slots, requests=args.requests,
+        max_new=args.max_new, max_len=args.max_len)
 
     out = {
         "bench": "serve",
@@ -464,6 +544,10 @@ def main():
         # beyond the visible device count are skipped; tokens asserted
         # identical across widths)
         "results_tp": results_tp,
+        # multi-replica router with 1-of-3 replicas flapping on a seeded
+        # plan: outcome counts, retries/failovers, and the e2e latency tax
+        # of failover vs the no-fault fleet (completions token-identical)
+        "results_faults": results_faults,
     }
     OUT.write_text(json.dumps(out, indent=2) + "\n")
     for r in results:
@@ -504,6 +588,15 @@ def main():
         print(f"serve_bench.tp{r['tp']}.{r['mode']},"
               f"decode_ms_per_step={r['decode_ms_per_step']},"
               f"{r['tok_per_s']} tok/s")
+    if results_faults:
+        f = results_faults
+        print(f"faults: outcomes={f['outcomes']}, "
+              f"retries={f['router']['retries']}, "
+              f"failures={f['router']['replica_failures']}, "
+              f"quarantines={f['router']['quarantines']}, "
+              f"e2e p99 {f['e2e_fake_s']['no_fault']['p99']} -> "
+              f"{f['e2e_fake_s']['flaky']['p99']} fake-s, "
+              f"tokens identical: {f['tokens_identical_to_no_fault']}")
     print(f"wrote {OUT}")
 
 

@@ -21,6 +21,17 @@ workload on the contiguous cache and asserts BYTE-IDENTICAL outputs plus a
 paged-footprint win. Exits non-zero if any request is dropped or over/under-
 generates, so this doubles as the CI batcher-regression smoke.
 
+``--replicas N`` serves the workload through the fault-tolerant
+multi-replica router instead of a single server: N data-parallel
+``BatchServer`` replicas (``--quantized-replicas M`` makes the last M of
+them int8-FFIP shed targets) behind load-aware dispatch, bounded-queue
+admission control, per-request deadlines (``--deadline-ms``), bounded
+retries and a per-replica circuit breaker. ``--fault-plan`` installs a
+deterministic chaos schedule — inline JSON, ``@path/to/plan.json``, or the
+shorthand ``flaky`` (replica 0 flaps raise/hang) — driven on a fake clock;
+the run must end with every request DONE (token-identical to a no-fault
+oracle of its serving tier) or failed with a TYPED error, never stuck.
+
 ``--prepared DIR`` serves from a `repro.prepare` artifact (built with
 ``python -m repro.launch.prepare``) instead of preparing weights in-process:
 warm start, zero re-quantization / y re-encode / re-tune. ``--mesh-model N``
@@ -93,6 +104,96 @@ def _serve(model, params, prompts, max_new, args, *, paged, mesh=None,
     return srv, done, time.perf_counter() - t0
 
 
+def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
+    """Multi-replica serving path (--replicas): returns exit-gate failures."""
+    from repro.serve.faults import FakeClock, FaultPlan
+    from repro.serve.lifecycle import Lifecycle, ServeStallError
+    from repro.serve.router import ReplicaRouter, RouterConfig
+
+    plan = None
+    if args.fault_plan:
+        plan = (FaultPlan.flaky_replica(0) if args.fault_plan == "flaky"
+                else FaultPlan.parse(args.fault_plan))
+    nq = min(args.quantized_replicas, args.replicas)
+    tiers = [i >= args.replicas - nq for i in range(args.replicas)]
+
+    def mk(q):
+        return BatchServer(
+            model, batch_slots=args.slots, max_len=args.max_len,
+            quantized=q, decode_chunk=args.decode_chunk,
+            gemm_impl=args.gemm_impl, gemm_block=args.gemm_block_parsed,
+            prefill_buckets=not args.no_prefill_buckets, paged=args.paged,
+            page_size=args.page_size, num_pages=args.num_pages,
+            prefill_chunk=args.prefill_chunk,
+            paged_attention=args.paged_attention, mesh=mesh,
+            prepared=prepared)
+
+    servers = [mk(q or args.quantized) for q in tiers]
+    clock = FakeClock() if plan is not None else None
+    rt = ReplicaRouter(servers, params, fault_plan=plan, clock=clock,
+                       cfg=RouterConfig(
+                           step_timeout_s=5.0, quarantine_s=0.2,
+                           max_retries=4,
+                           default_deadline_s=(args.deadline_ms / 1000.0
+                                               if args.deadline_ms else
+                                               None)))
+    t0 = time.perf_counter()
+    for i, p in enumerate(prompts):
+        rt.submit(Request(rid=i, prompt=p, max_new_tokens=args.max_new,
+                          eos_id=-1))
+    try:
+        recs = rt.drive(max_ticks=50_000)
+    except ServeStallError as e:
+        raise SystemExit(f"FAIL: {e}")
+    dt = time.perf_counter() - t0
+
+    # no-fault single-server oracle per tier that actually served work
+    want = {}
+    for q in sorted({rec.tier == "int8" for rec in recs.values()
+                     if rec.state is Lifecycle.DONE}):
+        ref = mk(q)
+        for i, p in enumerate(prompts):
+            ref.submit(Request(rid=i, prompt=p, max_new_tokens=args.max_new,
+                               eos_id=-1))
+        want[q] = {r.rid: list(r.out_tokens)
+                   for r in ref.run_until_drained(params)}
+
+    outcomes = rt.outcome_counts()
+    done = [rec for rec in recs.values() if rec.state is Lifecycle.DONE]
+    lat = np.array(sorted(rec.t_done - rec.t_submit for rec in done)) \
+        if done else np.zeros((0,))
+    unit = "fake-s" if clock is not None else "s"
+    mode = (f"router x{args.replicas}"
+            + (f" ({nq} int8 shed targets)" if nq else "")
+            + ("/paged" if args.paged else "")
+            + (f"/faults[{len(plan.faults)}]" if plan is not None else ""))
+    print(f"[{mode}] {len(done)}/{len(prompts)} done in {dt:.2f}s wall — "
+          f"outcomes {outcomes}")
+    if len(lat):
+        print(f"  e2e latency ({unit}): p50={np.percentile(lat, 50):.4f} "
+              f"p99={np.percentile(lat, 99):.4f}")
+    print(f"  router: {rt.stats}")
+
+    problems = []
+    if any(not rec.terminal for rec in recs.values()):
+        problems.append("non-terminal requests after drive()")
+    for rec in recs.values():
+        if rec.state is Lifecycle.DONE:
+            if rec.tokens != want[rec.tier == "int8"][rec.req.rid]:
+                problems.append(
+                    f"rid {rec.req.rid}: tokens diverge from the no-fault "
+                    f"{rec.tier} oracle")
+        elif rec.error is None:
+            problems.append(f"rid {rec.req.rid}: failed without a typed "
+                            f"error ({rec.state.value})")
+    if plan is None and args.deadline_ms is None and len(done) != len(recs):
+        problems.append("requests failed with no faults injected")
+    for s in servers:
+        if s.paged and s._reserved != 0:
+            problems.append("page reservation ledger did not drain to 0")
+    return problems
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(configs.ARCHS))
@@ -132,6 +233,20 @@ def main():
     ap.add_argument("--compare-contiguous", action="store_true",
                     help="also run the contiguous cache on the same workload "
                          "and assert byte-identical outputs (needs --paged)")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="serve through the multi-replica router over N "
+                         "data-parallel BatchServer replicas (0 = single "
+                         "server, the default)")
+    ap.add_argument("--quantized-replicas", type=int, default=0, metavar="M",
+                    help="make the last M of --replicas int8-FFIP shed "
+                         "targets (graceful degradation under pressure)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request end-to-end deadline for the router "
+                         "path (typed TIMED_OUT past it)")
+    ap.add_argument("--fault-plan", default=None, metavar="JSON|@FILE|flaky",
+                    help="deterministic chaos schedule for the router path "
+                         "(inline JSON, @path, or 'flaky'); runs on a fake "
+                         "clock")
     ap.add_argument("--prepared", default=None, metavar="DIR",
                     help="serve from a repro.prepare artifact "
                          "(python -m repro.launch.prepare)")
@@ -160,12 +275,23 @@ def main():
     prepared = None
     if args.prepared:
         from repro import prepare
+        from repro.prepare.artifact import ArtifactError
         t0 = time.perf_counter()
-        prepared = prepare.load(args.prepared)
-        print(f"loaded prepared artifact {args.prepared} "
-              f"({len(prepared.derived)} y-deltas, "
-              f"{len(prepared.schedule)} schedule entries, "
-              f"{time.perf_counter() - t0:.2f}s)")
+        try:
+            prepared = prepare.load(args.prepared)
+            print(f"loaded prepared artifact {args.prepared} "
+                  f"({len(prepared.derived)} y-deltas, "
+                  f"{len(prepared.schedule)} schedule entries, "
+                  f"{time.perf_counter() - t0:.2f}s)")
+        except ArtifactError as e:
+            # graceful degradation: a corrupt artifact (already quarantined
+            # by the loader) falls back to in-process preparation instead of
+            # taking serving down — unless warm start was REQUIRED.
+            if args.require_warm:
+                raise SystemExit(f"--require-warm but the prepared artifact "
+                                 f"is unusable: {e}")
+            print(f"WARNING: prepared artifact unusable ({e}); falling back "
+                  f"to in-process preparation", file=sys.stderr)
     mesh = _make_mesh(args.mesh_model) if args.mesh_model else None
     if args.require_warm:
         from repro import tune
@@ -173,6 +299,16 @@ def main():
 
     rng = np.random.default_rng(0)
     prompts = _make_prompts(cfg, args.requests, args.shared_prefix, rng)
+
+    if args.replicas:
+        problems = _serve_router(model, params, prompts, args, mesh=mesh,
+                                 prepared=prepared)
+        if problems:
+            print("FAIL:\n  " + "\n  ".join(problems), file=sys.stderr)
+            raise SystemExit(1)
+        print("OK")
+        return
+
     srv, done, dt = _serve(model, params, prompts, args.max_new, args,
                            paged=args.paged, mesh=mesh, prepared=prepared)
 

@@ -67,6 +67,7 @@ from repro.dist import context as dist_context
 from repro.dist import sharding as dist_sharding
 from repro.models.model import Model
 from repro.models.transformer import paged_cache_supported
+from repro.serve.lifecycle import AdmissionImpossibleError, ServeStallError
 from repro.serve.paged import (PageAllocator, PrefixIndex, page_keys,
                                partial_key)
 
@@ -82,6 +83,7 @@ class Request:
     out_tokens: Optional[List[int]] = None
     t_submit: float = 0.0         # set by submit()
     t_first: float = 0.0          # set when the first token lands (TTFT)
+    t_done: float = 0.0           # set when the request completes (e2e)
 
 
 @dataclasses.dataclass
@@ -177,6 +179,7 @@ class BatchServer:
         self.max_len = max_len
         self.decode_chunk = decode_chunk
         self.paged = paged
+        self.quantized = quantized   # the router's tier tag (shed policy)
         # dist x serve: `mesh` turns on tensor-parallel decode. Params and
         # cache are placed through the repro.dist rule engine (column/row-
         # parallel projections + KV-head sharding on the "model" axis,
@@ -192,6 +195,14 @@ class BatchServer:
         self.slots = [_Slot() for _ in range(batch_slots)]
         self._queue: "collections.deque[Request]" = collections.deque()
         self._completed: List[Request] = []
+        # idempotency: rid -> (payload key, tokens) for finished requests
+        # (bounded LRU); duplicate submits of an INFLIGHT rid wait here and
+        # are completed from the original's tokens without a second decode.
+        self._results: "collections.OrderedDict[int, Tuple[tuple, List[int]]]" \
+            = collections.OrderedDict()
+        self._result_cache_size = 1024
+        self._dup_waiters: Dict[int, List[Request]] = {}
+        self._cached_hits: List[Request] = []
         if paged:
             if page_size < 1 or (page_size & (page_size - 1)):
                 raise ValueError(f"page_size must be a power of two, "
@@ -399,15 +410,61 @@ class BatchServer:
         its page reservation from the same formula)."""
         return prompt_len + max(max_new_tokens, 1) - 1
 
+    @staticmethod
+    def _req_key(req: Request) -> tuple:
+        """Payload identity for idempotent rids: same rid MUST mean same
+        work, or the cached-completion contract would silently lie."""
+        return (np.asarray(req.prompt, np.int64).tobytes(),
+                int(req.max_new_tokens), int(req.eos_id))
+
+    def _find_inflight(self, rid: int) -> Optional[Request]:
+        for r in self._queue:
+            if r.rid == rid:
+                return r
+        for s in self.slots:
+            if s.req is not None and s.req.rid == rid:
+                return s.req
+        return None
+
     def submit(self, req: Request):
         rows = self.cache_rows(len(req.prompt), req.max_new_tokens)
         if rows > self.max_len:
-            raise ValueError(
+            raise AdmissionImpossibleError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
                 f"max_new_tokens ({req.max_new_tokens}) needs {rows} cache "
                 f"rows (the last sampled token is never written) but "
                 f"max_len is {self.max_len}")
+        if self.paged:
+            # fail fast at SUBMIT time: worst-case pages beyond the whole
+            # pool can never be admitted no matter how many slots drain.
+            pages = -(-rows // self.page_size)
+            if pages > self.num_pages:
+                raise AdmissionImpossibleError(
+                    f"request {req.rid}: needs {pages} pages worst-case "
+                    f"({rows} rows / page_size {self.page_size}) but the "
+                    f"pool holds only {self.num_pages}")
         req.t_submit = time.perf_counter()
+        key = self._req_key(req)
+        inflight = self._find_inflight(req.rid)
+        if inflight is not None:
+            if self._req_key(inflight) != key:
+                raise AdmissionImpossibleError(
+                    f"rid {req.rid} resubmitted with a different "
+                    f"prompt/budget while the original is in flight")
+            req.out_tokens = []
+            self._dup_waiters.setdefault(req.rid, []).append(req)
+            return
+        hit = self._results.get(req.rid)
+        if hit is not None:
+            hkey, toks = hit
+            if hkey != key:
+                raise AdmissionImpossibleError(
+                    f"rid {req.rid} resubmitted with a different "
+                    f"prompt/budget than its cached completion")
+            req.out_tokens = list(toks)
+            req.t_first = req.t_done = time.perf_counter()
+            self._cached_hits.append(req)
+            return
         req.out_tokens = []
         self._queue.append(req)
 
@@ -415,7 +472,92 @@ class BatchServer:
         return bool(self._queue)
 
     def _finish(self, req: Request):
+        req.t_done = time.perf_counter()
         self._completed.append(req)
+        self._results[req.rid] = (self._req_key(req), list(req.out_tokens))
+        self._results.move_to_end(req.rid)
+        while len(self._results) > self._result_cache_size:
+            self._results.popitem(last=False)
+        for w in self._dup_waiters.pop(req.rid, []):
+            w.out_tokens = list(req.out_tokens)
+            w.t_first = req.t_first
+            w.t_done = req.t_done
+            self._completed.append(w)
+
+    def take_completed(self) -> List[Request]:
+        """Drain the completion list (the router's per-tick collection path;
+        run_until_drained keeps accumulating instead)."""
+        done, self._completed = self._completed, []
+        return done
+
+    def abort(self, rid: int) -> bool:
+        """Remove a request wherever it lives — queue, slot, or the
+        idempotency cache — releasing every resource it held. A paged
+        request's pages are decref'd and its admission reservation is
+        returned (the ledger drains to 0), with prefix pages published only
+        up to the rows actually COMPUTED, so an aborted prefill never
+        poisons the prefix index. The cached result (if any) is dropped too:
+        after an abort, a resubmitted rid recomputes from scratch. Returns
+        True if anything was removed."""
+        found = self._results.pop(rid, None) is not None
+        for i, r in enumerate(self._queue):
+            if r.rid == rid:
+                del self._queue[i]
+                found = True
+                break
+        else:
+            for slot in self.slots:
+                if slot.req is not None and slot.req.rid == rid:
+                    if slot.seq is not None:
+                        self._release_seq(slot, upto=slot.seq.filled)
+                    slot.req = None
+                    slot.pos = 0
+                    slot.remaining = 0
+                    found = True
+                    break
+        # duplicates that were waiting on the aborted original become
+        # first-class queued requests (their payload is identical).
+        for w in self._dup_waiters.pop(rid, []):
+            self._queue.appendleft(w)
+        return found
+
+    # -- router-facing load/health introspection ---------------------------
+    def free_slots(self) -> int:
+        return sum(1 for s in self.slots if s.req is None)
+
+    def outstanding_rows(self) -> int:
+        """Worst-case cache rows committed to requests this server holds
+        (slots + internal queue) — the router's least-loaded metric."""
+        rows = 0
+        for s in self.slots:
+            if s.req is not None:
+                rows += self.cache_rows(len(s.req.prompt),
+                                        s.req.max_new_tokens)
+        for r in self._queue:
+            rows += self.cache_rows(len(r.prompt), r.max_new_tokens)
+        return rows
+
+    def page_headroom(self) -> Optional[int]:
+        """Upper bound on pages a NEW request could still claim (free pages
+        minus outstanding reservations, plus prefix-index entries that
+        admission may evict). None in contiguous mode."""
+        if not self.paged:
+            return None
+        return self.alloc.free_count - self._reserved + len(self.prefix)
+
+    def request_phase(self, rid: int) -> Optional[str]:
+        """'queued' | 'prefilling' | 'decoding' for an inflight rid, None if
+        unknown (completed or never submitted). Contiguous prefill is atomic
+        inside a step, so contiguous requests are never seen 'prefilling'."""
+        for r in self._queue:
+            if r.rid == rid:
+                return "queued"
+        for s in self.slots:
+            if s.req is not None and s.req.rid == rid:
+                if s.seq is not None and s.seq.compute_next < s.seq.n:
+                    return "prefilling"
+                return "decoding"
+        return None
 
     def _place(self, slot_i: int, req: Request, first: int):
         """Post-prefill bookkeeping shared by all prefill paths."""
@@ -622,16 +764,19 @@ class BatchServer:
                                  seq.pages[seq.registered])
             seq.registered += 1
 
-    def _release_seq(self, slot: _Slot):
+    def _release_seq(self, slot: _Slot, *, upto: Optional[int] = None):
         """Drop a finished request's page references. Prompt pages stay
         resident through the prefix index (which holds its own reference)
         until LRU eviction; the terminal partial page is published here —
         keyed by the whole prompt — so an identical prompt resubmitted later
-        skips prefill entirely."""
+        skips prefill entirely. ``upto`` caps publication at the prompt rows
+        actually computed (an ABORTED prefill publishes only its finished
+        pages — rows past ``seq.filled`` were never written)."""
         seq = slot.seq
-        self._register_prefix(seq, seq.n)
+        upto = seq.n if upto is None else min(upto, seq.n)
+        self._register_prefix(seq, upto)
         tail_li = seq.n // self.page_size
-        if (self.prefix_sharing and seq.pkey is not None
+        if (self.prefix_sharing and seq.pkey is not None and upto >= seq.n
                 and len(seq.pages) > tail_li):
             self.prefix.register(seq.pkey, seq.pages[tail_li])
         for p in seq.pages:
@@ -694,6 +839,9 @@ class BatchServer:
         CHUNK per mid-prefill slot (chunked prefill interleaves with decode
         instead of stalling it). Returns #active decode slots plus #prefill
         chunks dispatched."""
+        if self._cached_hits:   # idempotent duplicates: cached completions
+            self._completed.extend(self._cached_hits)
+            self._cached_hits.clear()
         params = self._params_for(params)
         self._admit(params)
         prefill_work = self._prefill_tick(params) if self.paged else 0
@@ -783,10 +931,28 @@ class BatchServer:
         requests in COMPLETION order — including requests admitted and
         completed within a single step (e.g. max_new_tokens=1). ``stats``
         describe this run only (reset here alongside the completion list);
-        ``compiles`` is server-lifetime and is NOT reset."""
+        ``compiles`` is server-lifetime and is NOT reset.
+
+        Hitting ``max_steps`` with requests still live raises a typed
+        :class:`ServeStallError` listing every stuck request id and where it
+        was wedged (queued, or its slot's position/budget) — a frozen queue
+        surfaces loudly instead of returning a silently short list."""
         self._completed = []
         self.stats = self._fresh_stats()
         for _ in range(max_steps):
             if self.step(params) == 0 and not self._queue:
                 break
+        else:
+            stuck: Dict[int, str] = {}
+            for r in self._queue:
+                stuck[r.rid] = "queued (never admitted)"
+            for i, s in enumerate(self.slots):
+                if s.req is not None:
+                    phase = self.request_phase(s.req.rid) or "decoding"
+                    stuck[s.req.rid] = (f"slot {i} ({phase}): pos={s.pos} "
+                                        f"remaining={s.remaining}")
+            if stuck:
+                raise ServeStallError(
+                    f"run_until_drained hit max_steps={max_steps} with "
+                    f"{len(stuck)} request(s) still live", stuck=stuck)
         return self._completed

@@ -1,0 +1,502 @@
+"""Fault-tolerant load-aware router over N data-parallel BatchServer replicas.
+
+The ROADMAP's multi-replica front end: N independent :class:`BatchServer`
+replicas (each optionally ``mesh=`` tensor-parallel and/or ``quantized=True``
+int8-FFIP) behind one router that owns admission, placement, deadlines,
+retries, and replica health — the piece that keeps the FFIP serving stack UP
+when a replica stalls, crashes, exhausts its page pool, or returns garbage.
+
+**Lifecycle.** Every request is a :class:`~repro.serve.lifecycle.RequestRecord`
+moving QUEUED -> ADMITTED -> (PREFILLING ->) DECODING -> DONE / FAILED /
+TIMED_OUT. Terminal states are final: a late or duplicate completion of a
+retried request is dropped (counted, never re-emitted).
+
+**Load-aware dispatch.** A request leaves the router queue only when some
+healthy replica has a free slot AND (paged) enough page-pool headroom for its
+worst-case reservation; among candidates the one with the fewest outstanding
+cache rows wins. Admission control is a bounded queue — past ``max_queue``
+the submit raises :class:`RejectedError` with a ``retry_after_s`` hint
+(backpressure instead of unbounded memory).
+
+**Graceful degradation.** In a mixed fleet, float replicas are preferred;
+under pressure (router queue at ``shed_queue_depth``, or float replicas out
+of headroom) requests are SHED to int8-FFIP replicas first — the paper's
+half-the-MACs quantized path used as a live capacity lever — and only
+rejected when even that capacity is gone.
+
+**Failure handling.** A replica step that raises or overruns the step
+timeout fails ALL its in-flight requests over: each is aborted on the
+replica (pages released, reservation ledger drained, cached result dropped)
+and re-queued with bounded retries + exponential backoff + jitter
+(deterministic under an injected clock/rng). ``breaker_threshold``
+consecutive failures quarantine the replica (outstanding work drains to the
+queue); after an exponentially growing cool-down it gets ONE probe request —
+success re-admits it, failure re-quarantines. Every completion passes the
+cheap output-sanity check before being exposed; a poisoned batch is
+discarded and retried elsewhere. Requests decode from scratch on retry, so a
+completed request's tokens are identical to a no-fault run (greedy decode is
+deterministic and batch-composition-independent — the bit-identity contract
+the serve tests already prove).
+
+The drive loop feeds the shared :class:`repro.watchdog.Watchdog` (the same
+EMA/dead-man logic as the train loop) with per-tick durations; hang faults
+show up as straggler events and wedged external drivers trip the dead-man.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve import lifecycle as lc
+from repro.serve.batcher import BatchServer, Request
+from repro.serve.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.watchdog import Watchdog, WatchdogConfig
+
+HEALTHY, PROBING, QUARANTINED = "healthy", "probing", "quarantined"
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    max_queue: int = 64             # admission control: bounded router queue
+    max_retries: int = 2            # retries per request beyond attempt 0
+    backoff_base_s: float = 0.05    # exponential backoff base
+    backoff_jitter: float = 0.5     # x rng.random() multiplier on top
+    step_timeout_s: float = 30.0    # one replica dispatch > this == hang
+    default_deadline_s: Optional[float] = None   # per-request e2e deadline
+    # optional per-phase timeouts keyed by lifecycle value
+    # ("queued"/"admitted"/"prefilling"/"decoding")
+    phase_timeouts_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    breaker_threshold: int = 3      # consecutive failures -> quarantine
+    quarantine_s: float = 1.0       # doubles per consecutive quarantine
+    shed_queue_depth: int = 4       # queue depth counting as "pressure"
+    tick_s: float = 0.01            # fake-clock advance per drive tick
+
+
+class _Replica:
+    """Router-side handle: health state + outstanding work for one server."""
+
+    def __init__(self, idx: int, server: BatchServer, params):
+        self.idx = idx
+        self.server = server
+        self.params = params
+        self.tier = "int8" if server.quantized else "float"
+        self.state = HEALTHY
+        self.consec_failures = 0
+        self.quarantine_count = 0
+        self.quarantined_until = 0.0
+        self.outstanding: Dict[int, lc.RequestRecord] = {}
+        self.dispatches = 0         # fault-plan step index
+        self.held_pages: List[int] = []   # exhaust-fault allocator refs
+
+
+class ReplicaRouter:
+    def __init__(self, servers: Sequence[BatchServer], params, *,
+                 cfg: Optional[RouterConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 clock=None, rng=None,
+                 watchdog_cfg: Optional[WatchdogConfig] = None):
+        if not servers:
+            raise ValueError("need at least one replica")
+        self.cfg = cfg or RouterConfig()
+        self.clock = clock
+        self._fake = hasattr(clock, "advance")
+        self.plan = fault_plan
+        if self.plan is not None and self.plan.has_hangs and not self._fake:
+            raise ValueError(
+                "hang faults need an injected FakeClock (a real hang cannot "
+                "be interrupted deterministically)")
+        seed = self.plan.seed if self.plan is not None else 0
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+        self.replicas = [_Replica(i, s, params)
+                         for i, s in enumerate(servers)]
+        self._mixed = len({r.tier for r in self.replicas}) > 1
+        self.records: Dict[int, lc.RequestRecord] = {}
+        self._rq: "collections.deque[int]" = collections.deque()
+        self.ticks = 0
+        self.events: List[Tuple] = []
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "dedup_submits": 0, "rejected": 0,
+            "dispatched": 0, "completed": 0, "failed": 0, "timed_out": 0,
+            "retries": 0, "replica_failures": 0, "poisoned": 0,
+            "shed_to_quantized": 0, "quarantines": 0, "probes": 0,
+            "probe_successes": 0, "duplicate_emissions_dropped": 0,
+        }
+        self.dog = Watchdog(
+            watchdog_cfg or WatchdogConfig(), clock=self._now,
+            on_straggler=lambda step, dt, ema: self.events.append(
+                ("straggler_tick", step, dt, ema)))
+
+    # -- time --------------------------------------------------------------
+    def _now(self) -> float:
+        return self.clock() if self.clock is not None else time.monotonic()
+
+    # -- submission / admission control ------------------------------------
+    def _fits_anywhere(self, req: Request) -> bool:
+        return any(self._fits(r, req) for r in self.replicas)
+
+    @staticmethod
+    def _fits(r: _Replica, req: Request) -> bool:
+        rows = BatchServer.cache_rows(len(req.prompt), req.max_new_tokens)
+        if rows > r.server.max_len:
+            return False
+        if r.server.paged:
+            return -(-rows // r.server.page_size) <= r.server.num_pages
+        return True
+
+    def submit(self, req: Request, *,
+               deadline_s: Optional[float] = None) -> lc.RequestRecord:
+        """Queue a request; returns its lifecycle record. Idempotent in the
+        request id: resubmitting a rid returns the EXISTING record (with its
+        cached tokens if already DONE) instead of decoding twice. Raises
+        :class:`AdmissionImpossibleError` if no replica could ever hold the
+        request, :class:`RejectedError` when the bounded queue is full."""
+        now = self._now()
+        rec = self.records.get(req.rid)
+        if rec is not None:
+            if BatchServer._req_key(rec.req) != BatchServer._req_key(req):
+                raise lc.AdmissionImpossibleError(
+                    f"rid {req.rid} resubmitted with a different "
+                    f"prompt/budget")
+            self.stats["dedup_submits"] += 1
+            return rec
+        if not self._fits_anywhere(req):
+            raise lc.AdmissionImpossibleError(
+                f"request {req.rid}: no replica can ever admit it "
+                f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens} "
+                f"exceeds every replica's cache/pool)")
+        depth = sum(1 for rid in self._rq
+                    if not self.records[rid].terminal)
+        if depth >= self.cfg.max_queue:
+            self.stats["rejected"] += 1
+            raise lc.RejectedError(
+                f"router queue full ({depth}/{self.cfg.max_queue})",
+                retry_after_s=self.cfg.backoff_base_s * (1 + depth))
+        d = deadline_s if deadline_s is not None \
+            else self.cfg.default_deadline_s
+        rec = lc.RequestRecord(req=req, t_submit=now,
+                               deadline=None if d is None else now + d)
+        rec.history.append((lc.Lifecycle.QUEUED.value, now))
+        self.records[req.rid] = rec
+        self._rq.append(req.rid)
+        self.stats["submitted"] += 1
+        return rec
+
+    # -- drive loop --------------------------------------------------------
+    def step(self) -> bool:
+        """One drive tick: expire deadlines, revive quarantined replicas,
+        dispatch queued work load-aware, run every replica that holds work
+        (under fault injection when a plan is installed), collect + sanity-
+        check completions. Returns True while any work remains."""
+        self.ticks += 1
+        if self._fake:
+            self.clock.advance(self.cfg.tick_s)
+        t0 = self._now()
+        self._expire(t0)
+        self._revive(t0)
+        self._dispatch(t0)
+        for r in self.replicas:
+            if r.state == QUARANTINED or not r.outstanding:
+                continue
+            self._drive_replica(r)
+        self.dog.observe(self.ticks, self._now() - t0)
+        return bool(self._rq) or any(r.outstanding for r in self.replicas)
+
+    def drive(self, *, max_ticks: int = 10_000) -> Dict[int, lc.RequestRecord]:
+        """Step until every record is terminal; raises
+        :class:`ServeStallError` (listing the stuck requests) if the tick
+        budget runs out first."""
+        ticks = 0
+        while any(not rec.terminal for rec in self.records.values()):
+            if ticks >= max_ticks:
+                stuck = {rid: f"{rec.state.value} (replica {rec.replica}, "
+                              f"attempt {rec.attempts})"
+                         for rid, rec in self.records.items()
+                         if not rec.terminal}
+                raise lc.ServeStallError(
+                    f"router.drive hit max_ticks={max_ticks} with "
+                    f"{len(stuck)} request(s) still live", stuck=stuck)
+            self.step()
+            self.dog.check_hang()
+            ticks += 1
+        return self.records
+
+    # -- deadlines / phase timeouts ----------------------------------------
+    def _expire(self, now: float):
+        for rec in self.records.values():
+            if rec.terminal:
+                continue
+            why = None
+            if rec.deadline is not None and now > rec.deadline:
+                why = f"request {rec.req.rid} exceeded its deadline"
+            else:
+                pt = self.cfg.phase_timeouts_s.get(rec.state.value)
+                if pt is not None and now - rec.phase_entered > pt:
+                    why = (f"request {rec.req.rid} spent "
+                           f">{pt:.3f}s in {rec.state.value}")
+            if why is None:
+                continue
+            if rec.replica is not None:
+                r = self.replicas[rec.replica]
+                r.server.abort(rec.req.rid)
+                r.outstanding.pop(rec.req.rid, None)
+            rec.error = lc.DeadlineExceededError(why, phase=rec.state.value)
+            rec.transition(lc.Lifecycle.TIMED_OUT, now)
+            self.stats["timed_out"] += 1
+            self.events.append(("timed_out", rec.req.rid, rec.state.value))
+
+    # -- health ------------------------------------------------------------
+    def _revive(self, now: float):
+        for r in self.replicas:
+            if r.state == QUARANTINED and now >= r.quarantined_until:
+                r.state = PROBING
+                r.consec_failures = 0
+                self.stats["probes"] += 1
+                self.events.append(("probe", r.idx, self.ticks))
+
+    def _quarantine(self, r: _Replica, cause: BaseException):
+        r.quarantine_count += 1
+        cool = self.cfg.quarantine_s * (2 ** (r.quarantine_count - 1))
+        r.state = QUARANTINED
+        r.quarantined_until = self._now() + cool
+        self.stats["quarantines"] += 1
+        self.events.append(("quarantine", r.idx, self.ticks, cool))
+        # drain: every request still on the replica goes back to the queue
+        err = lc.ReplicaFailedError(
+            f"replica {r.idx} quarantined for {cool:.3f}s",
+            replica=r.idx, cause=cause)
+        for rid in list(r.outstanding):
+            rec = r.outstanding.pop(rid)
+            r.server.abort(rid)
+            self._retry(rec, err)
+
+    def _after_failure(self, r: _Replica, cause: BaseException):
+        if r.state == PROBING or \
+                r.consec_failures >= self.cfg.breaker_threshold:
+            self._quarantine(r, cause)
+
+    # -- retry path --------------------------------------------------------
+    def _retry(self, rec: lc.RequestRecord, err: BaseException):
+        if rec.terminal:
+            return
+        now = self._now()
+        rec.replica = None
+        rec.last_error = err
+        if rec.attempts >= self.cfg.max_retries:
+            rec.error = lc.RetriesExhaustedError(
+                f"request {rec.req.rid} gave up",
+                attempts=rec.attempts + 1, cause=err)
+            rec.transition(lc.Lifecycle.FAILED, now)
+            self.stats["failed"] += 1
+            return
+        rec.attempts += 1
+        self.stats["retries"] += 1
+        backoff = self.cfg.backoff_base_s * (2 ** (rec.attempts - 1))
+        backoff *= 1.0 + self.cfg.backoff_jitter * float(self.rng.random())
+        rec.next_eligible = now + backoff
+        rec.transition(lc.Lifecycle.QUEUED, now)
+        self._rq.append(rec.req.rid)
+        self.events.append(("retry", rec.req.rid, rec.attempts,
+                            type(err).__name__))
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch(self, now: float):
+        pressure = len(self._rq) >= self.cfg.shed_queue_depth
+        held: List[int] = []
+        while self._rq:
+            rid = self._rq.popleft()
+            rec = self.records[rid]
+            if rec.terminal:
+                continue
+            if rec.next_eligible > now:
+                held.append(rid)
+                continue
+            r = self._pick(rec, pressure)
+            if r is None:
+                held.append(rid)
+                continue
+            creq = Request(rid=rid, prompt=rec.req.prompt,
+                           max_new_tokens=rec.req.max_new_tokens,
+                           eos_id=rec.req.eos_id)
+            r.server.submit(creq)
+            rec.replica = r.idx
+            rec.transition(lc.Lifecycle.ADMITTED, now)
+            r.outstanding[rid] = rec
+            self.stats["dispatched"] += 1
+        self._rq.extend(held)
+
+    def _pick(self, rec: lc.RequestRecord,
+              pressure: bool) -> Optional[_Replica]:
+        cands = []
+        rows = BatchServer.cache_rows(len(rec.req.prompt),
+                                      rec.req.max_new_tokens)
+        for r in self.replicas:
+            if r.state == QUARANTINED:
+                continue
+            if r.state == PROBING and r.outstanding:
+                continue          # a probing replica gets ONE probe at a time
+            if not self._fits(r, rec.req):
+                continue
+            # cap in-flight work at the slot count: backlog stays in the
+            # ROUTER queue (shedable, observable, timeout-able) instead of
+            # piling invisibly in replica-internal queues
+            if len(r.outstanding) >= r.server.b or \
+                    r.server.free_slots() == 0:
+                continue
+            if r.server.paged:
+                pages = -(-rows // r.server.page_size)
+                if r.server.page_headroom() < pages:
+                    continue
+            cands.append(r)
+        if not cands:
+            return None
+        floats = [c for c in cands if c.tier == "float"]
+        quants = [c for c in cands if c.tier == "int8"]
+        if pressure and quants:
+            pool = quants          # shed to half-the-MACs capacity first
+        elif floats:
+            pool = floats
+        else:
+            pool = cands
+        best = min(pool, key=lambda r: (r.server.outstanding_rows(), r.idx))
+        if self._mixed and best.tier == "int8":
+            self.stats["shed_to_quantized"] += 1
+            self.events.append(("shed", rec.req.rid, best.idx))
+        return best
+
+    # -- replica execution under fault injection ---------------------------
+    def _apply_exhaust(self, r: _Replica, active: List[FaultSpec]):
+        """Enter/leave the pool-exhaustion window: seize every free page
+        with real allocator references (so mid-flight allocations hit
+        genuine exhaustion) and release them when the window closes."""
+        want = any(f.kind == "exhaust" for f in active)
+        if want and r.server.paged and not r.held_pages:
+            while r.server.alloc.free_count:
+                r.held_pages.append(r.server.alloc.alloc())
+            self.events.append(("exhaust_begin", r.idx,
+                                len(r.held_pages)))
+        elif not want and r.held_pages:
+            for p in r.held_pages:
+                r.server.alloc.decref(p)
+            self.events.append(("exhaust_end", r.idx, len(r.held_pages)))
+            r.held_pages = []
+
+    def _drive_replica(self, r: _Replica):
+        d = r.dispatches
+        r.dispatches += 1
+        active = self.plan.active(r.idx, d) if self.plan is not None else []
+        kinds = {f.kind for f in active}
+        self._apply_exhaust(r, active)
+        t0 = self._now()
+        try:
+            if "raise" in kinds:
+                raise InjectedFault("raise", r.idx, d)
+            if "exhaust" in kinds and not r.server.paged:
+                # no pool to drain on a contiguous replica: the fault
+                # surfaces as the allocation failure it models
+                raise InjectedFault("exhaust", r.idx, d)
+            if "hang" in kinds:
+                f = next(f for f in active if f.kind == "hang")
+                self.clock.advance(f.hang_s or 2 * self.cfg.step_timeout_s)
+            else:
+                r.server.step(r.params)
+        except Exception as e:     # noqa: BLE001 — any step failure fails over
+            self.stats["replica_failures"] += 1
+            r.consec_failures += 1
+            self.events.append(("replica_failure", r.idx, self.ticks,
+                                type(e).__name__))
+            err = e if isinstance(e, lc.ServeError) else \
+                lc.ReplicaFailedError(f"replica {r.idx} step raised: {e}",
+                                      replica=r.idx, cause=e)
+            for rid in list(r.outstanding):
+                rec = r.outstanding.pop(rid)
+                r.server.abort(rid)
+                self._retry(rec, err)
+            self._after_failure(r, err)
+            return
+        elapsed = self._now() - t0
+        if elapsed > self.cfg.step_timeout_s:
+            self.stats["replica_failures"] += 1
+            r.consec_failures += 1
+            self.events.append(("replica_hang", r.idx, self.ticks, elapsed))
+            err = lc.ReplicaFailedError(
+                f"replica {r.idx} step took {elapsed:.3f}s "
+                f"(> step_timeout_s {self.cfg.step_timeout_s})",
+                replica=r.idx, cause=TimeoutError(f"{elapsed:.3f}s"))
+            for rid in list(r.outstanding):
+                rec = r.outstanding.pop(rid)
+                r.server.abort(rid)
+                self._retry(rec, err)
+            self._after_failure(r, err)
+            return
+        done = r.server.take_completed()
+        if "poison" in kinds:
+            bad = r.server.model.cfg.vocab + 7    # out-of-vocab sentinel
+            for creq in done:
+                if creq.out_tokens:
+                    creq.out_tokens[-1] = bad
+        clean = True
+        for creq in done:
+            clean &= self._on_complete(r, creq)
+        if clean:
+            r.consec_failures = 0
+        self._update_phases(r)
+
+    def _on_complete(self, r: _Replica, creq: Request) -> bool:
+        now = self._now()
+        rec = r.outstanding.pop(creq.rid, None)
+        if rec is None or rec.terminal:
+            # late completion of an aborted/retried/timed-out request:
+            # never re-emitted (the duplicate-emission guard)
+            self.stats["duplicate_emissions_dropped"] += 1
+            return True
+        defect = lc.output_sanity_error(
+            creq.out_tokens, vocab=r.server.model.cfg.vocab,
+            max_new=creq.max_new_tokens, eos_id=creq.eos_id)
+        if defect is not None:
+            r.server.abort(creq.rid)     # drop the poisoned cached result
+            r.consec_failures += 1
+            self.stats["poisoned"] += 1
+            self.events.append(("poisoned", r.idx, creq.rid))
+            err = lc.PoisonedOutputError(
+                f"replica {r.idx} request {creq.rid}: {defect}")
+            self._retry(rec, err)
+            self._after_failure(r, err)
+            return False
+        rec.tokens = list(creq.out_tokens)
+        rec.tier = r.tier
+        rec.t_done = now
+        rec.transition(lc.Lifecycle.DONE, now)
+        self.stats["completed"] += 1
+        if r.state == PROBING:
+            r.state = HEALTHY
+            r.quarantine_count = 0       # successful probe resets the cool-
+            self.stats["probe_successes"] += 1   # down exponent too
+            self.events.append(("probe_success", r.idx, self.ticks))
+        return True
+
+    def _update_phases(self, r: _Replica):
+        now = self._now()
+        phase_map = {"queued": lc.Lifecycle.ADMITTED,
+                     "prefilling": lc.Lifecycle.PREFILLING,
+                     "decoding": lc.Lifecycle.DECODING}
+        for rid, rec in r.outstanding.items():
+            phase = r.server.request_phase(rid)
+            want = phase_map.get(phase)
+            if want is not None and rec.state != want and not rec.terminal:
+                rec.transition(want, now)
+
+    # -- results -----------------------------------------------------------
+    def completed_tokens(self) -> Dict[int, List[int]]:
+        return {rid: rec.tokens for rid, rec in self.records.items()
+                if rec.state == lc.Lifecycle.DONE}
+
+    def outcome_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for rec in self.records.values():
+            out[rec.state.value] = out.get(rec.state.value, 0) + 1
+        return out

@@ -1,66 +1,15 @@
 """Straggler mitigation + failure handling for the training loop.
 
-On a real multi-host deployment this wraps per-host heartbeats; here the same
-logic runs against observed step times so it is fully unit-testable:
-
-  * EMA step-time tracker; a step > ``threshold`` x EMA flags a straggler;
-  * K consecutive straggler flags trigger the mitigation callback (in
-    production: demote the host / re-shard its data / trigger elastic
-    down-scale via ckpt restore on a smaller mesh);
-  * a dead-man timer raises if no step completes within ``hang_timeout`` —
-    the launcher catches it, restores the latest checkpoint and relaunches
-    (see examples/train_tiny_lm.py for the restart wiring).
+The EMA/dead-man logic now lives in the shared :mod:`repro.watchdog` (the
+serving replica router drives the SAME implementation against its tick
+clock); this module keeps the training-facing names stable.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, List, Optional
+from repro.watchdog import HangError, Watchdog, WatchdogConfig
+
+__all__ = ["HangError", "StepWatchdog", "WatchdogConfig"]
 
 
-@dataclasses.dataclass
-class WatchdogConfig:
-    ema_decay: float = 0.9
-    threshold: float = 2.5          # x EMA = straggler
-    consecutive_to_act: int = 3
-    hang_timeout_s: float = 600.0
-
-
-class StepWatchdog:
-    def __init__(self, cfg: WatchdogConfig = WatchdogConfig(),
-                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
-        self.cfg = cfg
-        self.ema: Optional[float] = None
-        self.flags = 0
-        self.events: List[dict] = []
-        self.on_straggler = on_straggler
-        self._last_tick = time.monotonic()
-
-    def observe(self, step: int, dt: float) -> bool:
-        """Feed one step duration; returns True if mitigation fired."""
-        self._last_tick = time.monotonic()
-        fired = False
-        if self.ema is None:
-            self.ema = dt
-        else:
-            if dt > self.cfg.threshold * self.ema:
-                self.flags += 1
-                self.events.append(dict(step=step, dt=dt, ema=self.ema))
-                if self.flags >= self.cfg.consecutive_to_act:
-                    fired = True
-                    self.flags = 0
-                    if self.on_straggler is not None:
-                        self.on_straggler(step, dt, self.ema)
-            else:
-                self.flags = 0
-            # EMA excludes outliers so one straggler does not poison the baseline
-            if dt <= self.cfg.threshold * self.ema:
-                self.ema = (self.cfg.ema_decay * self.ema
-                            + (1 - self.cfg.ema_decay) * dt)
-        return fired
-
-    def check_hang(self) -> None:
-        if time.monotonic() - self._last_tick > self.cfg.hang_timeout_s:
-            raise TimeoutError(
-                f"no training step for >{self.cfg.hang_timeout_s}s — "
-                "launcher should restore the latest checkpoint and relaunch")
+class StepWatchdog(Watchdog):
+    """Training-loop alias of the shared watchdog (real clock by default)."""

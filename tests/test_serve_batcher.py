@@ -159,3 +159,89 @@ def test_submit_capacity_boundary_last_token_needs_no_row():
     srv.submit(Request(rid=2, prompt=full, max_new_tokens=1))
     done = srv.run_until_drained(params)
     assert len(done) == 1 and len(done[0].out_tokens) == 1
+
+
+# -- ISSUE 8 satellites: typed stalls, fail-fast admission, idempotent rids
+
+
+def test_run_until_drained_stall_raises_typed_error():
+    """Exhausting max_steps with live requests raises ServeStallError
+    listing every stuck rid and where it was wedged — never a silently
+    short completion list."""
+    from repro.serve.lifecycle import ServeStallError
+
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=1, max_len=MAX_LEN)
+    prompts = _prompts(cfg, [4, 6])
+    srv.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12))
+    srv.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=12))
+    with pytest.raises(ServeStallError) as ei:
+        srv.run_until_drained(params, max_steps=2)
+    assert set(ei.value.stuck) == {0, 1}
+    assert "queued" in ei.value.stuck[1]          # rid 1 never got the slot
+    assert isinstance(ei.value, RuntimeError)     # backcompat contract
+    # the server is still usable: a fresh drain finishes both
+    done = srv.run_until_drained(params)
+    assert sorted(r.rid for r in done) == [0, 1]
+
+
+def test_submit_impossible_is_typed_and_fails_fast():
+    """Never-admittable requests fail AT SUBMIT with the typed error, for
+    both capacity models: contiguous (rows > max_len) and paged (worst-case
+    pages > whole pool) — not after sitting in a queue forever."""
+    from repro.serve.lifecycle import AdmissionImpossibleError
+
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=1, max_len=8)
+    with pytest.raises(AdmissionImpossibleError):
+        srv.submit(Request(rid=0, prompt=np.zeros(6, np.int64),
+                           max_new_tokens=4))
+    pg = BatchServer(model, batch_slots=1, max_len=MAX_LEN, paged=True,
+                     page_size=4, num_pages=3)    # pool: 12 rows max
+    with pytest.raises(AdmissionImpossibleError):
+        pg.submit(Request(rid=0, prompt=np.zeros(10, np.int64),
+                          max_new_tokens=8))      # 17 rows -> 5 pages > 3
+    assert not pg.has_queued()
+    assert pg._reserved == 0
+
+
+def test_duplicate_rid_after_done_returns_cached_completion():
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN)
+    p = _prompts(cfg, [5])[0]
+    srv.submit(Request(rid=7, prompt=p, max_new_tokens=4))
+    first = srv.run_until_drained(params)
+    want = list(first[0].out_tokens)
+    # resubmit the SAME rid+payload: cached tokens, zero device work
+    srv.submit(Request(rid=7, prompt=p, max_new_tokens=4))
+    again = srv.run_until_drained(params)
+    assert len(again) == 1 and list(again[0].out_tokens) == want
+    assert srv.stats["decode_dispatches"] == 0
+    assert srv.stats["prefill_dispatches"] == 0
+
+
+def test_duplicate_rid_while_inflight_decodes_once():
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN)
+    p = _prompts(cfg, [6], seed=3)[0]
+    srv.submit(Request(rid=9, prompt=p, max_new_tokens=5))
+    srv.submit(Request(rid=9, prompt=p, max_new_tokens=5))   # dup, queued
+    done = srv.run_until_drained(params)
+    # both submissions complete with identical tokens from ONE decode
+    assert len(done) == 2
+    assert done[0].out_tokens == done[1].out_tokens
+    assert srv.stats["prefill_tokens"] == len(p)             # prefilled once
+
+
+def test_duplicate_rid_with_different_payload_rejected():
+    from repro.serve.lifecycle import AdmissionImpossibleError
+
+    cfg, model, params = _setup("minicpm-2b")
+    srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN)
+    p, q = _prompts(cfg, [5, 6], seed=4)
+    srv.submit(Request(rid=1, prompt=p, max_new_tokens=4))
+    with pytest.raises(AdmissionImpossibleError):
+        srv.submit(Request(rid=1, prompt=q, max_new_tokens=4))   # inflight
+    srv.run_until_drained(params)
+    with pytest.raises(AdmissionImpossibleError):
+        srv.submit(Request(rid=1, prompt=p, max_new_tokens=9))   # vs cached

@@ -27,6 +27,7 @@ import pytest
 from repro import configs
 from repro.models.model import build_model
 from repro.serve.batcher import BatchServer, Request
+from repro.serve.lifecycle import AdmissionImpossibleError
 from repro.serve.paged import (PageAllocator, PrefixIndex, page_keys,
                                partial_key)
 
@@ -265,12 +266,13 @@ def test_paged_capacity_boundary_and_pool_exhaustion():
     with pytest.raises(ValueError):
         srv.submit(Request(rid=9, prompt=p12, max_new_tokens=6))
     # a request whose worst case exceeds the whole POOL fails loudly at
-    # admission instead of hanging the queue forever
+    # submit time (typed, still a ValueError) instead of entering the
+    # queue and hanging it forever
     srv2 = BatchServer(model, batch_slots=2, max_len=16, paged=True,
                        page_size=4, num_pages=2)
-    srv2.submit(Request(rid=0, prompt=p12, max_new_tokens=2))
-    with pytest.raises(RuntimeError):
-        srv2.run_until_drained(params)
+    with pytest.raises(AdmissionImpossibleError):
+        srv2.submit(Request(rid=0, prompt=p12, max_new_tokens=2))
+    assert srv2._reserved == 0
     # a pool smaller than slots x max_pages just queues: admission waits for
     # running requests to release pages, everything still completes
     srv3 = BatchServer(model, batch_slots=2, max_len=16, paged=True,
@@ -298,3 +300,77 @@ def test_paged_rejects_unsupported_configs():
         "falcon-mamba-7b")))
     with pytest.raises(ValueError):                 # SSM state is not rows
         BatchServer(ssm, batch_slots=1, max_len=48, paged=True, page_size=8)
+
+
+# -- ISSUE 8 satellites: faulted/aborted requests must drain the ledger
+
+
+def test_abort_mid_prefill_releases_reservation_and_keeps_index_clean():
+    """Abort a request halfway through chunked prefill: its page
+    reservation returns to the ledger (drains to 0), the allocator
+    invariant holds, and only FULLY COMPUTED prompt pages were published to
+    the prefix index — a resubmission completes with oracle tokens."""
+    cfg, model, params = _setup("minicpm-2b")
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, size=(30,))
+
+    ref = BatchServer(model, batch_slots=1, max_len=MAX_LEN)
+    ref.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    want = list(ref.run_until_drained(params)[0].out_tokens)
+
+    srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN, paged=True,
+                      page_size=PS, num_pages=12, prefill_chunk=PS)
+    srv.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    srv.step(params)                  # admit + first 8-token prefill chunk
+    assert srv.request_phase(0) == "prefilling"
+    assert srv._reserved > 0
+    assert srv.abort(0)
+    assert srv._reserved == 0
+    assert srv.alloc.free_count + srv.alloc.in_use == srv.num_pages
+    # only the one completed page is published; rows 8.. were never
+    # computed, so their keys must NOT serve future prefix hits
+    assert len(srv.prefix) <= 1
+    srv.submit(Request(rid=1, prompt=prompt, max_new_tokens=5))
+    done = srv.run_until_drained(params)
+    assert len(done) == 1 and list(done[0].out_tokens) == want
+    assert srv._reserved == 0
+
+
+def test_pool_churn_with_mid_prefill_aborts_never_leaks():
+    """Heavy churn through a small pool with prefix sharing and periodic
+    mid-prefill aborts: LRU eviction keeps admission alive, every surviving
+    request matches its fresh-server oracle, and the allocator/ledger end
+    exactly clean."""
+    cfg, model, params = _setup("minicpm-2b")
+    rng = np.random.default_rng(12)
+    base = rng.integers(0, cfg.vocab, size=(16,))
+    prompts = [np.concatenate([base, rng.integers(0, cfg.vocab, size=(8,))])
+               for _ in range(6)]
+
+    def oracle(p):
+        ref = BatchServer(model, batch_slots=1, max_len=MAX_LEN)
+        ref.submit(Request(rid=0, prompt=p, max_new_tokens=4))
+        return list(ref.run_until_drained(params)[0].out_tokens)
+
+    srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN, paged=True,
+                      page_size=PS, num_pages=10, prefill_chunk=PS)
+    survivors = {}
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        if i % 2 == 0:
+            srv.step(params)          # partway into prefill...
+            srv.abort(i)              # ...then gone
+        else:
+            done = srv.run_until_drained(params)
+            for r in done:
+                survivors[r.rid] = list(r.out_tokens)
+        assert srv._reserved == 0 or srv.request_phase(i) is not None
+        assert srv.alloc.free_count + srv.alloc.in_use == srv.num_pages
+    assert sorted(survivors) == [1, 3, 5]
+    for rid, toks in survivors.items():
+        assert toks == oracle(prompts[rid]), rid
+    # end state: nothing reserved, every page accounted for, and the index
+    # holds at most the pool (shared-prefix pages were evicted under churn)
+    assert srv._reserved == 0
+    assert srv.alloc.free_count + srv.alloc.in_use == srv.num_pages
+    assert len(srv.prefix) <= srv.num_pages

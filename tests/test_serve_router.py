@@ -1,0 +1,350 @@
+"""Fault-tolerant multi-replica serving (ISSUE 8).
+
+The deterministic fault matrix is the heart: every fault kind
+(raise / hang / exhaust / poison) x {float, int8-FFIP} x {contiguous,
+paged} drives a seeded FaultPlan against a 2-replica fleet and must end
+with EVERY request DONE, token-identical to a no-fault single-server
+oracle — zero stuck requests, zero duplicate emissions, bounded retries,
+and (paged) the admission reservation ledger drained to 0. On top of
+that: deadlines and per-phase timeouts, bounded-queue backpressure,
+fail-fast admission, router-level idempotent rids, shed-to-quantized
+degradation, and the circuit breaker's quarantine -> probe -> re-admission
+cycle.
+
+attention_impl is forced to "naive" (as in test_serve_paged) so paged and
+contiguous runs share literally the same einsums — bit-identity, not
+allclose.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serve import lifecycle as lc
+from repro.serve.batcher import BatchServer, Request
+from repro.serve.faults import FakeClock, FaultPlan, FaultSpec, InjectedFault
+from repro.serve.lifecycle import Lifecycle
+from repro.serve.router import (HEALTHY, QUARANTINED, ReplicaRouter,
+                                RouterConfig)
+from repro.watchdog import WatchdogConfig
+
+MAX_LEN = 48
+LENS = [3, 7, 5, 9, 4, 6]
+MAX_NEW = 5
+
+_STATE = {}
+
+
+def _setup():
+    if not _STATE:
+        cfg = configs.smoke_config(configs.get_config("minicpm-2b"))
+        cfg = dataclasses.replace(cfg, attention_impl="naive")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _STATE["m"] = (cfg, model, params)
+        _STATE["oracle"] = {}
+    return _STATE["m"]
+
+
+def _prompts(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(n,)) for n in LENS]
+
+
+def _oracle(quantized):
+    """No-fault single-server reference tokens, computed once per tier."""
+    cfg, model, params = _setup()
+    if quantized not in _STATE["oracle"]:
+        srv = BatchServer(model, batch_slots=2, max_len=MAX_LEN,
+                          quantized=quantized)
+        for i, p in enumerate(_prompts(cfg)):
+            srv.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW,
+                               eos_id=-1))
+        done = srv.run_until_drained(params)
+        _STATE["oracle"][quantized] = {r.rid: list(r.out_tokens)
+                                       for r in done}
+    return _STATE["oracle"][quantized]
+
+
+def _fleet(n, *, quantized=False, paged=False, slots=2):
+    cfg, model, params = _setup()
+    kw = dict(paged=True, page_size=4, num_pages=24) if paged else {}
+    if isinstance(quantized, bool):
+        quantized = [quantized] * n
+    return [BatchServer(model, batch_slots=slots, max_len=MAX_LEN,
+                        quantized=q, **kw) for q in quantized], params
+
+
+def _submit_all(rt, cfg, **kw):
+    for i, p in enumerate(_prompts(cfg)):
+        rt.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW,
+                          eos_id=-1), **kw)
+
+
+# fault windows tuned so every kind actually FIRES against this workload
+# (asserted below — a fault plan that no-ops tests nothing)
+_PLANS = {
+    "raise": FaultPlan([FaultSpec(kind="raise", replica=0, at_dispatch=1,
+                                  duration=2)], seed=3),
+    "hang": FaultPlan([FaultSpec(kind="hang", replica=0, at_dispatch=1,
+                                 duration=2)], seed=3),
+    "exhaust": FaultPlan([FaultSpec(kind="exhaust", replica=0,
+                                    at_dispatch=0, duration=3)], seed=3),
+    "poison": FaultPlan([FaultSpec(kind="poison", replica=0, at_dispatch=0,
+                                   duration=8)], seed=3),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(_PLANS))
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+@pytest.mark.parametrize("quantized", [False, True], ids=["float", "int8"])
+def test_fault_matrix_completes_token_identical(kind, paged, quantized):
+    """Every injected fault ends in completion with the no-fault oracle's
+    exact tokens — never a stuck queue, never a duplicate emission."""
+    cfg, model, params = _setup()
+    want = _oracle(quantized)
+    servers, params = _fleet(2, quantized=quantized, paged=paged)
+    rt = ReplicaRouter(servers, params,
+                       cfg=RouterConfig(step_timeout_s=5.0,
+                                        quarantine_s=0.2, max_retries=4),
+                       fault_plan=_PLANS[kind], clock=FakeClock())
+    _submit_all(rt, cfg)
+    recs = rt.drive(max_ticks=2000)
+
+    assert all(r.terminal for r in recs.values())
+    toks = rt.completed_tokens()
+    assert sorted(toks) == list(range(len(LENS))), rt.outcome_counts()
+    for i, t in toks.items():
+        assert t == want[i], (kind, paged, quantized, i)
+    # the fault actually fired
+    assert rt.stats["replica_failures"] + rt.stats["poisoned"] >= 1, rt.stats
+    # bounded retries: every attempt count within budget
+    assert all(r.attempts <= rt.cfg.max_retries for r in recs.values())
+    # a completion is exposed exactly once per rid (terminal-is-final)
+    assert rt.stats["completed"] == len(LENS)
+    for s in servers:
+        if s.paged:      # reservation ledger drains to 0, pool is leak-free
+            assert s._reserved == 0
+            assert s.alloc.free_count + s.alloc.in_use == s.num_pages
+
+
+def test_retries_exhausted_is_typed_and_bounded():
+    """A fleet whose only replica always raises fails every request with
+    RetriesExhaustedError after exactly max_retries+1 attempts — no hang."""
+    cfg, model, params = _setup()
+    plan = FaultPlan([FaultSpec(kind="raise", replica=0, at_dispatch=0,
+                                duration=10_000)])
+    servers, params = _fleet(1)
+    # breaker disabled: with it on, the lone replica would sit quarantined
+    # and requests would wait QUEUED (that path is covered by the drain
+    # test); here every dispatch must fail so the retry budget burns down
+    rt = ReplicaRouter(servers, params,
+                       cfg=RouterConfig(max_retries=2, quarantine_s=0.05,
+                                        step_timeout_s=5.0,
+                                        breaker_threshold=10**6),
+                       fault_plan=plan, clock=FakeClock())
+    _submit_all(rt, cfg)
+    recs = rt.drive(max_ticks=2000)
+    for rec in recs.values():
+        assert rec.state is Lifecycle.FAILED
+        assert isinstance(rec.error, lc.RetriesExhaustedError)
+        assert rec.error.attempts == 3
+        assert isinstance(rec.error.cause, lc.ReplicaFailedError)
+
+
+def test_deadline_and_phase_timeouts():
+    cfg, model, params = _setup()
+    servers, params = _fleet(1, slots=1)
+    clock = FakeClock()
+    rt = ReplicaRouter(servers, params, clock=clock,
+                       cfg=RouterConfig(tick_s=0.01,
+                                        phase_timeouts_s={"queued": 0.02}))
+    prompts = _prompts(cfg)
+    # rid 0: normal; rid 1: deadline so tight it expires before dispatch
+    rt.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=MAX_NEW,
+                      eos_id=-1))
+    rt.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=MAX_NEW,
+                      eos_id=-1), deadline_s=0.005)
+    # rids 2..4: behind a 1-slot replica, the queued-phase timeout reaps
+    # whatever is still waiting after 2 ticks in the queue
+    for i in (2, 3, 4):
+        rt.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=MAX_NEW,
+                          eos_id=-1))
+    recs = rt.drive(max_ticks=2000)
+    assert recs[0].state is Lifecycle.DONE
+    assert recs[0].tokens == _oracle(False)[0]
+    assert recs[1].state is Lifecycle.TIMED_OUT
+    assert isinstance(recs[1].error, lc.DeadlineExceededError)
+    assert recs[1].error.phase == "queued"
+    timed_out = [i for i in (2, 3, 4)
+                 if recs[i].state is Lifecycle.TIMED_OUT]
+    assert timed_out, "queued-phase timeout never fired"
+    for i in timed_out:
+        assert isinstance(recs[i].error, lc.DeadlineExceededError)
+    # ledger still clean after timeout-driven aborts
+    assert rt.stats["timed_out"] == len(timed_out) + 1
+
+
+def test_backpressure_bounded_queue_rejects_with_retry_hint():
+    cfg, model, params = _setup()
+    servers, params = _fleet(1, slots=1)
+    rt = ReplicaRouter(servers, params, cfg=RouterConfig(max_queue=2),
+                       clock=FakeClock())
+    prompts = _prompts(cfg)
+    rt.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=2, eos_id=-1))
+    rt.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=2, eos_id=-1))
+    with pytest.raises(lc.RejectedError) as ei:
+        rt.submit(Request(rid=2, prompt=prompts[2], max_new_tokens=2,
+                          eos_id=-1))
+    assert ei.value.retry_after_s > 0
+    assert rt.stats["rejected"] == 1
+    # the admitted work still completes
+    recs = rt.drive(max_ticks=2000)
+    assert recs[0].state is Lifecycle.DONE
+    assert recs[1].state is Lifecycle.DONE
+
+
+def test_admission_impossible_fails_fast_at_router():
+    cfg, model, params = _setup()
+    servers, params = _fleet(2, paged=True)
+    rt = ReplicaRouter(servers, params, clock=FakeClock())
+    big = np.zeros((MAX_LEN + 10,), np.int64)
+    with pytest.raises(lc.AdmissionImpossibleError):
+        rt.submit(Request(rid=0, prompt=big, max_new_tokens=4, eos_id=-1))
+    assert not rt.records         # nothing queued
+
+
+def test_router_idempotent_duplicate_rids():
+    cfg, model, params = _setup()
+    servers, params = _fleet(1)
+    rt = ReplicaRouter(servers, params, clock=FakeClock())
+    prompts = _prompts(cfg)
+    req = Request(rid=0, prompt=prompts[0], max_new_tokens=MAX_NEW,
+                  eos_id=-1)
+    rec = rt.submit(req)
+    # duplicate while queued: the SAME record, no second entry
+    dup = Request(rid=0, prompt=prompts[0], max_new_tokens=MAX_NEW,
+                  eos_id=-1)
+    assert rt.submit(dup) is rec
+    assert rt.stats["dedup_submits"] == 1
+    assert rt.stats["submitted"] == 1
+    rt.drive(max_ticks=2000)
+    # duplicate after DONE: cached completion, no recompute
+    dispatched = rt.stats["dispatched"]
+    again = rt.submit(Request(rid=0, prompt=prompts[0],
+                              max_new_tokens=MAX_NEW, eos_id=-1))
+    assert again.state is Lifecycle.DONE
+    assert again.tokens == _oracle(False)[0]
+    assert rt.stats["dispatched"] == dispatched
+    # same rid with a DIFFERENT payload is a contract violation
+    with pytest.raises(lc.AdmissionImpossibleError):
+        rt.submit(Request(rid=0, prompt=prompts[1], max_new_tokens=MAX_NEW,
+                          eos_id=-1))
+
+
+def test_shed_to_quantized_under_pressure():
+    """Mixed fleet: queue pressure sheds work to the int8-FFIP replica
+    (half-the-MACs capacity) instead of rejecting; every completion matches
+    the oracle of the TIER that served it."""
+    cfg, model, params = _setup()
+    servers, params = _fleet(2, quantized=[False, True], slots=1)
+    rt = ReplicaRouter(servers, params, clock=FakeClock(),
+                       cfg=RouterConfig(shed_queue_depth=2))
+    _submit_all(rt, cfg)
+    recs = rt.drive(max_ticks=2000)
+    assert all(r.state is Lifecycle.DONE for r in recs.values())
+    assert rt.stats["shed_to_quantized"] >= 1
+    tiers = {rec.tier for rec in recs.values()}
+    assert tiers == {"float", "int8"}          # both tiers actually served
+    for rid, rec in recs.items():
+        assert rec.tokens == _oracle(rec.tier == "int8")[rid], (rid, rec.tier)
+
+
+def test_circuit_breaker_quarantine_probe_readmission():
+    """3 consecutive failures quarantine the replica; after the cool-down it
+    gets ONE probe, and a successful probe re-admits it as healthy."""
+    cfg, model, params = _setup()
+    plan = FaultPlan([FaultSpec(kind="raise", replica=0, at_dispatch=0,
+                                duration=3)])
+    # 1-slot replicas keep a backlog queued long enough that the revived
+    # replica's probe actually has a request to prove itself on
+    servers, params = _fleet(2, slots=1)
+    clock = FakeClock()
+    rt = ReplicaRouter(servers, params, clock=clock,
+                       cfg=RouterConfig(breaker_threshold=3,
+                                        quarantine_s=0.02, max_retries=5,
+                                        step_timeout_s=5.0),
+                       fault_plan=plan)
+    _submit_all(rt, cfg)
+    recs = rt.drive(max_ticks=2000)
+    assert all(r.state is Lifecycle.DONE for r in recs.values())
+    kinds = [e[0] for e in rt.events]
+    assert "quarantine" in kinds
+    assert "probe" in kinds
+    assert rt.stats["quarantines"] >= 1
+    assert rt.stats["probes"] >= 1
+    assert rt.stats["probe_successes"] >= 1
+    assert rt.replicas[0].state == HEALTHY     # re-admitted after the probe
+    toks = rt.completed_tokens()
+    want = _oracle(False)
+    assert all(toks[i] == want[i] for i in toks)
+
+
+def test_quarantined_replica_drains_work_to_queue():
+    cfg, model, params = _setup()
+    plan = FaultPlan([FaultSpec(kind="raise", replica=0, at_dispatch=0,
+                                duration=10_000)])
+    servers, params = _fleet(2)
+    rt = ReplicaRouter(servers, params, clock=FakeClock(),
+                       cfg=RouterConfig(breaker_threshold=1,
+                                        quarantine_s=1000.0, max_retries=4,
+                                        step_timeout_s=5.0),
+                       fault_plan=plan)
+    _submit_all(rt, cfg)
+    recs = rt.drive(max_ticks=2000)
+    # replica 0 stays quarantined; replica 1 serves EVERYTHING correctly
+    assert rt.replicas[0].state == QUARANTINED
+    assert not rt.replicas[0].outstanding
+    want = _oracle(False)
+    for rid, rec in recs.items():
+        assert rec.state is Lifecycle.DONE
+        assert rec.tokens == want[rid]
+
+
+def test_hang_faults_require_fake_clock():
+    servers, params = _fleet(1)
+    plan = FaultPlan([FaultSpec(kind="hang", replica=0, at_dispatch=0)])
+    with pytest.raises(ValueError, match="FakeClock"):
+        ReplicaRouter(servers, params, fault_plan=plan)   # real clock
+
+
+def test_watchdog_sees_hung_replica_as_straggler():
+    """The shared train/serve watchdog flags the hang tick (its duration
+    explodes vs the EMA of healthy ticks)."""
+    cfg, model, params = _setup()
+    plan = FaultPlan([FaultSpec(kind="hang", replica=0, at_dispatch=2)])
+    servers, params = _fleet(2)
+    rt = ReplicaRouter(servers, params, clock=FakeClock(), fault_plan=plan,
+                       cfg=RouterConfig(step_timeout_s=5.0, max_retries=4),
+                       watchdog_cfg=WatchdogConfig(consecutive_to_act=1))
+    _submit_all(rt, cfg)
+    rt.drive(max_ticks=2000)
+    assert any(e[0] == "straggler_tick" for e in rt.events)
+
+
+def test_fault_plan_roundtrip_and_parse():
+    plan = FaultPlan.flaky_replica(0, start=2, period=4, rounds=3, seed=7)
+    back = FaultPlan.parse(plan.to_json())
+    assert back.faults == plan.faults
+    assert back.seed == 7
+    assert plan.has_hangs
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor", replica=0, at_dispatch=0)
+    clock = FakeClock()
+    clock.advance(1.5)
+    assert clock() == 1.5
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)

@@ -8,6 +8,15 @@ knob, and writes ``benchmarks/BENCH_serve.json``: tok/s, steps/s, the
 prefill / decode / host-overhead split from BatchServer.stats, per-step host
 transfer, TTFT, e2e p50/p99 request latency, and compile counts.
 
+Schema note (since the repro.obs subsystem landed): the latency percentiles
+in ``results*`` — ``e2e_ms`` per contiguous/paged row and ``e2e_fake_s`` in
+``results_faults`` — are computed from the obs latency histograms
+(``serve_request_e2e_seconds`` / ``router_request_e2e_seconds``, each run on
+its own fresh ``obs.Registry``), cross-checked in-process against the raw
+per-request records (exact-reservoir quantiles, so the numbers are
+bit-comparable with the pre-obs percentile math). Numbers measured before
+earlier refactors stay verbatim under ``baseline_pr2`` / ``baseline_prev``.
+
 ``results_faults`` drives the multi-replica router with 1-of-3 replicas
 flapping on a seeded FaultPlan (raise/hang, fake clock) and records outcome
 counts, retries/failovers/quarantines, and the e2e latency tax of failover
@@ -59,6 +68,7 @@ import time
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro import configs
 from repro.models.model import build_model
 from repro.serve.batcher import BatchServer, Request
@@ -149,7 +159,8 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
                       paged=paged, page_size=page_size,
                       prefill_chunk=prefill_chunk,
                       paged_attention=paged_attention,
-                      mesh=mesh, prepared=prepared)
+                      mesh=mesh, prepared=prepared,
+                      registry=obs.Registry())
 
     def _workload(budget, s):
         if mix_long_len:
@@ -174,6 +185,11 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
     srv.run_until_drained(params)
     compile_s = time.perf_counter() - t0
 
+    # fresh registry between warmup and the timed run, so the obs histograms
+    # the percentiles come from hold ONLY the steady-state requests
+    srv.registry = obs.Registry()
+    srv.set_obs_labels(srv.obs_labels)
+
     # --- timed steady-state run
     reqs = _workload(max_new, seed)
     n_reqs = len(reqs)
@@ -186,7 +202,16 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
 
     total = sum(len(r.out_tokens) for r in done)
     ttft = [r.t_first - r.t_submit for r in done]
+    # e2e percentiles come from the obs latency histogram (exact while the
+    # reservoir holds every observation — these workloads are far under it);
+    # cross-check against the per-request records so a telemetry regression
+    # can never silently skew the bench numbers.
+    e2e_hist = srv.registry.get("serve_request_e2e_seconds").labels(
+        replica=srv.obs_labels.get("replica", "solo"))
     e2e = np.array(sorted(r.t_done - r.t_submit for r in done))
+    for q, pct in ((0.50, 50), (0.99, 99)):
+        assert abs(e2e_hist.quantile(q) - float(np.percentile(e2e, pct))) \
+            < 1e-9, "obs e2e histogram diverges from request records"
     st = srv.stats
     steps = st["steps"]
     out = {
@@ -218,9 +243,10 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
         # queue wait + prefill until the first token, per request
         "ttft_ms": {"mean": round(1e3 * sum(ttft) / len(ttft), 2),
                     "max": round(1e3 * max(ttft), 2)},
-        # submit -> last token, per request (queue wait included)
-        "e2e_ms": {"p50": round(1e3 * float(np.percentile(e2e, 50)), 2),
-                   "p99": round(1e3 * float(np.percentile(e2e, 99)), 2)},
+        # submit -> last token, per request (queue wait included); sourced
+        # from the obs histogram serve_request_e2e_seconds
+        "e2e_ms": {"p50": round(1e3 * e2e_hist.quantile(0.50), 2),
+                   "p99": round(1e3 * e2e_hist.quantile(0.99), 2)},
         # on-device sampling: ids, not logits, cross per decode step
         "host_bytes_per_step": round(st["host_bytes_decode"] / max(steps, 1), 1),
         "host_bytes_per_step_pr2": slots * cfg.vocab * 4,   # (B, V) f32 logits
@@ -325,10 +351,13 @@ def bench_faults(arch: str, *, slots: int, requests: int, max_new: int,
     params = model.init(jax.random.PRNGKey(0))
 
     def run(plan):
-        servers = [BatchServer(model, batch_slots=slots, max_len=max_len)
+        reg = obs.Registry()
+        servers = [BatchServer(model, batch_slots=slots, max_len=max_len,
+                               registry=reg)
                    for _ in range(3)]
         rt = ReplicaRouter(
             servers, params, fault_plan=plan, clock=FakeClock(),
+            registry=reg,
             cfg=RouterConfig(step_timeout_s=5.0, quarantine_s=0.2,
                              max_retries=4))
         t0 = time.perf_counter()
@@ -338,14 +367,20 @@ def bench_faults(arch: str, *, slots: int, requests: int, max_new: int,
         wall = time.perf_counter() - t0
         done = [rec for rec in recs.values()
                 if rec.state is Lifecycle.DONE]
+        # fake-clock e2e percentiles from the router's obs histogram,
+        # cross-checked against the lifecycle records
+        hist = reg.get("router_request_e2e_seconds")
         lat = np.array(sorted(rec.t_done - rec.t_submit for rec in done))
-        return recs, rt, wall, lat
+        for q, pct in ((0.50, 50), (0.99, 99)):
+            assert abs(hist.quantile(q) - float(np.percentile(lat, pct))) \
+                < 1e-9, "obs router e2e histogram diverges from records"
+        return recs, rt, wall, hist
 
     quiet_plan = FaultPlan([], seed=0)
     flaky_plan = FaultPlan.flaky_replica(0, start=2, period=4, rounds=4,
                                          seed=0)
-    ref, _, quiet_wall, quiet_lat = run(quiet_plan)
-    recs, rt, wall, lat = run(flaky_plan)
+    ref, _, quiet_wall, quiet_hist = run(quiet_plan)
+    recs, rt, wall, hist = run(flaky_plan)
     for rid, rec in recs.items():
         assert rec.terminal, f"rid {rid} not terminal under faults"
         if rec.state is Lifecycle.DONE:
@@ -360,12 +395,13 @@ def bench_faults(arch: str, *, slots: int, requests: int, max_new: int,
         "router": dict(rt.stats),
         "wall_s": round(wall, 3),
         "wall_s_no_fault": round(quiet_wall, 3),
-        # fake-clock seconds: queue wait + backoff + failover, not compute
+        # fake-clock seconds: queue wait + backoff + failover, not compute;
+        # sourced from the obs histogram router_request_e2e_seconds
         "e2e_fake_s": {
-            "no_fault": {"p50": round(float(np.percentile(quiet_lat, 50)), 3),
-                         "p99": round(float(np.percentile(quiet_lat, 99)), 3)},
-            "flaky": {"p50": round(float(np.percentile(lat, 50)), 3),
-                      "p99": round(float(np.percentile(lat, 99)), 3)},
+            "no_fault": {"p50": round(quiet_hist.quantile(0.50), 3),
+                         "p99": round(quiet_hist.quantile(0.99), 3)},
+            "flaky": {"p50": round(hist.quantile(0.50), 3),
+                      "p99": round(hist.quantile(0.99), 3)},
         },
         "tokens_identical_to_no_fault": True,
     }
@@ -530,7 +566,10 @@ def main():
                  "oracle + per-chunk host dispatch on CPU (worst case for "
                  "paging); the load-bearing paged outputs are the footprint "
                  "(pages_peak vs contiguous_equiv_pages) and the "
-                 "prefix-hit / prefill-token collapse, not tok/s."),
+                 "prefix-hit / prefill-token collapse, not tok/s. "
+                 "e2e_ms / e2e_fake_s percentiles are sourced from the "
+                 "repro.obs latency histograms (exact-reservoir quantiles, "
+                 "cross-checked against per-request records in-process)."),
         "baseline_pr2": BASELINE_PR2,
         "baseline_prev": BASELINE_PREV,
         "comparison": comparison,

@@ -50,6 +50,7 @@ from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 from repro.kernels.ffip_gemm import ffip_tile
 from repro.kernels.fip_gemm import fip_tile
 from repro.kernels import ops as kops
+from repro.obs import profile as _obs_profile
 
 Array = jax.Array
 
@@ -303,6 +304,10 @@ def conv_gemm_fused(x: Array, kernel: Array, *, stride: Size2 = 1,
     if ph or pw:
         x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     kh, kw, _, _ = kernel.shape
+    sh, sw = as_pair(stride)
+    _obs_profile.on_conv(x, kernel, oh=(x.shape[1] - kh) // sh + 1,
+                         ow=(x.shape[2] - kw) // sw + 1, groups=groups,
+                         algo=algo)
     bg = _derived(f"stack{groups}", kernel,
                   lambda k_: _kernel_to_stack(k_, groups))
     out = fused_conv_raw(x, bg, kh=kh, kw=kw, stride=stride, groups=groups,

@@ -23,6 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import resolve_interpret, tpu_compiler_params
+from repro.obs import profile as _obs_profile
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -254,6 +255,7 @@ def flash_attention(q: Array, k: Array, v: Array, window=0,
     ``interpret=None`` auto-detects the backend (compat.py); ``bq``/``bk``
     are the q/k sequence block sizes — the attention layer resolves tuned
     values through ``repro.tune`` under ``GemmConfig(block="auto")``."""
+    _obs_profile.on_flash(q, k, causal=causal)
     out, _ = _flash_fwd(q, k, v, window, causal=causal, interpret=interpret,
                         bq=bq, bk=bk)
     return out

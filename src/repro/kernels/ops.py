@@ -22,6 +22,7 @@ from repro.kernels.baseline_gemm import baseline_gemm
 from repro.kernels.compat import resolve_interpret, tpu_compiler_params  # noqa: F401
 from repro.kernels.fip_gemm import fip_gemm
 from repro.kernels.ffip_gemm import ffip_gemm
+from repro.obs import profile as _obs_profile
 
 Array = jax.Array
 
@@ -53,7 +54,6 @@ def _round_up_pow2(x: int) -> int:
     return p
 
 
-@functools.partial(jax.jit, static_argnames=("algo", "interpret", "bm", "bn", "bk"))
 def matmul(a: Array, b: Array, *, algo: str = "ffip", interpret=None,
            bm: int = 0, bn: int = 0, bk: int = 0) -> Array:
     """C = A @ B via the Pallas kernels. a: (..., M, K), b: (K, N).
@@ -63,7 +63,18 @@ def matmul(a: Array, b: Array, *, algo: str = "ffip", interpret=None,
     ``interpret=None`` auto-detects the backend (kernels/compat.py); pass
     ``bm``/``bn``/``bk`` (e.g. from a ``repro.tune`` schedule) to override the
     static default blocks.
+
+    Thin python wrapper over the jitted core so ``repro.obs.profile`` sees
+    every dispatch (eager call = dispatch; tracer operands = compile-side).
     """
+    _obs_profile.on_gemm(a, b, algo)
+    return _matmul_jit(a, b, algo=algo, interpret=interpret,
+                       bm=bm, bn=bn, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "interpret", "bm", "bn", "bk"))
+def _matmul_jit(a: Array, b: Array, *, algo: str = "ffip", interpret=None,
+                bm: int = 0, bn: int = 0, bk: int = 0) -> Array:
     interpret = resolve_interpret(interpret)
     *batch, m, k = a.shape
     k2, n = b.shape

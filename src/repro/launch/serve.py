@@ -32,6 +32,15 @@ shorthand ``flaky`` (replica 0 flaps raise/hang) — driven on a fake clock;
 the run must end with every request DONE (token-identical to a no-fault
 oracle of its serving tier) or failed with a TYPED error, never stuck.
 
+Observability (``repro.obs``): ``--metrics-json PATH`` dumps the run's
+metric registry snapshot (plus the unified compile-counter snapshot) as
+JSON at exit; ``--trace-out PATH`` writes the span trace — ``.jsonl`` for
+the line-per-span form, anything else for Chrome ``trace_event`` JSON
+(load in Perfetto / chrome://tracing); ``--metrics-port N`` serves live
+Prometheus text on ``http://127.0.0.1:N/metrics`` for the duration of the
+run. ``python -m repro.launch.obs_check`` validates the two files against
+the workload (CI obs-smoke gate).
+
 ``--prepared DIR`` serves from a `repro.prepare` artifact (built with
 ``python -m repro.launch.prepare``) instead of preparing weights in-process:
 warm start, zero re-quantization / y re-encode / re-tune. ``--mesh-model N``
@@ -51,8 +60,10 @@ import time
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro import configs
 from repro.models.model import build_model
+from repro.obs import profile as obs_profile
 from repro.serve.batcher import BatchServer, Request
 
 
@@ -116,8 +127,12 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
                 else FaultPlan.parse(args.fault_plan))
     nq = min(args.quantized_replicas, args.replicas)
     tiers = [i >= args.replicas - nq for i in range(args.replicas)]
+    clock = FakeClock() if plan is not None else None
 
     def mk(q):
+        # clock threading: under a fault plan every replica reads the SAME
+        # fake clock as the router, so spans/latency histograms line up with
+        # the deterministic fault schedule.
         return BatchServer(
             model, batch_slots=args.slots, max_len=args.max_len,
             quantized=q, decode_chunk=args.decode_chunk,
@@ -126,10 +141,9 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
             page_size=args.page_size, num_pages=args.num_pages,
             prefill_chunk=args.prefill_chunk,
             paged_attention=args.paged_attention, mesh=mesh,
-            prepared=prepared)
+            prepared=prepared, clock=clock)
 
     servers = [mk(q or args.quantized) for q in tiers]
-    clock = FakeClock() if plan is not None else None
     rt = ReplicaRouter(servers, params, fault_plan=plan, clock=clock,
                        cfg=RouterConfig(
                            step_timeout_s=5.0, quarantine_s=0.2,
@@ -191,7 +205,23 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
     for s in servers:
         if s.paged and s._reserved != 0:
             problems.append("page reservation ledger did not drain to 0")
-    return problems
+    return problems, rt
+
+
+def _write_obs(args, tracer) -> None:
+    """Dump --metrics-json / --trace-out. Called BEFORE the regression gates
+    raise, so a failing run still leaves its telemetry behind for triage."""
+    if args.metrics_json:
+        import json
+        payload = {"metrics": obs.get_registry().snapshot(),
+                   "compile": obs_profile.compile_snapshot()}
+        with open(args.metrics_json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"  obs: metrics -> {args.metrics_json}")
+    if args.trace_out and tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"  obs: trace ({len(tracer.spans)} spans, "
+              f"{tracer.dropped} dropped) -> {args.trace_out}")
 
 
 def main():
@@ -260,11 +290,31 @@ def main():
                     help="fail fast (listing missing keys) if any schedule "
                          "lookup missed or the prepared artifact recomputed "
                          "offline work")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the repro.obs metric-registry snapshot (+ "
+                         "unified compile counters) as JSON at exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the span trace: *.jsonl = one span per line, "
+                         "otherwise Chrome trace_event JSON (Perfetto)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve live Prometheus text on 127.0.0.1:N/metrics "
+                         "for the duration of the run (0 = ephemeral port)")
     args = ap.parse_args()
     args.gemm_block_parsed = args.gemm_block
     if args.gemm_block and args.gemm_block != "auto":
         args.gemm_block_parsed = tuple(
             int(x) for x in args.gemm_block.split(","))
+
+    # Fresh per-run registry + profiler so --metrics-json captures exactly
+    # this run (servers/routers/kernel hooks all resolve the process default
+    # at construction time).
+    obs.set_registry(obs.Registry())
+    obs_profile.set_profiler(None)
+    if args.metrics_port is not None:
+        httpd = obs.start_metrics_server(obs.get_registry(),
+                                         port=args.metrics_port)
+        print(f"metrics: http://{httpd.server_address[0]}:"
+              f"{httpd.server_address[1]}/metrics")
 
     cfg = configs.get_config(args.arch)
     if args.smoke:
@@ -301,8 +351,9 @@ def main():
     prompts = _make_prompts(cfg, args.requests, args.shared_prefix, rng)
 
     if args.replicas:
-        problems = _serve_router(model, params, prompts, args, mesh=mesh,
-                                 prepared=prepared)
+        problems, rt = _serve_router(model, params, prompts, args, mesh=mesh,
+                                     prepared=prepared)
+        _write_obs(args, rt.tracer)
         if problems:
             print("FAIL:\n  " + "\n  ".join(problems), file=sys.stderr)
             raise SystemExit(1)
@@ -311,6 +362,7 @@ def main():
 
     srv, done, dt = _serve(model, params, prompts, args.max_new, args,
                            paged=args.paged, mesh=mesh, prepared=prepared)
+    _write_obs(args, srv.tracer)
 
     total = sum(len(r.out_tokens) for r in done)
     mode = "int8-ffip" if args.quantized else "float"

@@ -1,0 +1,285 @@
+"""Kernel profiling hooks: per-dispatch counts, achieved GOPS, bytes moved.
+
+The paper's headline numbers (§6, Eqs. 31a-c) are *rates* — GOPS, GOPS per
+multiplier — which until now only existed inside bench scripts. This module
+gives every Pallas call site one place to record:
+
+* **dispatches** — a thin hook in ``kernels/ops.matmul``,
+  ``kernels/conv_gemm.conv_gemm_fused`` and
+  ``kernels/flash_attention.flash_attention`` calls
+  :meth:`KernelProfiler.record_gemm` / ``record_conv`` / ``record_flash``.
+  Eager calls count as dispatches; calls made while JAX is tracing (operands
+  are ``Tracer``\\s) count separately as ``traces`` — a traced call runs the
+  python body once per compilation, not per step, so folding the two
+  together would overcount by exactly the compile amortization the serving
+  stack works to achieve.
+
+* **work done** — effective (baseline-equivalent) FLOPs from
+  ``core/analytical`` Eq. (1), algo-specific multiplier counts from
+  Eqs. (5)/(7) so FIP/FFIP's 2x multiply reduction is visible in telemetry,
+  and operand+result bytes for roofline placement.
+
+* **achieved rates** — ``record_timed`` (called by ``tune/measure``'s
+  timing harness) turns a measured wall time into achieved GOPS
+  (histogram + last-value gauge per ``{kernel, algo, dtype}``).
+
+* **compile events** — :func:`compile_snapshot` unifies the previously
+  scattered counters: ``kernels/compat.DerivedCache.stats``,
+  ``tune.stats`` (schedule-cache hits/misses) and ``tune/measure.counters``
+  (candidates timed/failed) into one dict. Imports are lazy: this module
+  must stay importable from ``kernels/``, so it never imports ``kernels``
+  or ``tune`` at module level.
+
+Metric families (all labeled ``{kernel, algo, dtype}``):
+``repro_kernel_dispatches_total``, ``repro_kernel_traces_total``,
+``repro_kernel_flops_total``, ``repro_kernel_mults_total``,
+``repro_kernel_bytes_total``, ``repro_kernel_measured_gops`` (gauge),
+``repro_kernel_measured_seconds`` (histogram).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core import analytical
+
+_TIMING_BUCKETS = (1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3,
+                   5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0)
+
+_LABELS = ("kernel", "algo", "dtype")
+
+
+def _is_tracer(*xs) -> bool:
+    try:
+        import jax
+        return any(isinstance(x, jax.core.Tracer) for x in xs)
+    except Exception:               # jax unavailable / API drift: count eager
+        return False
+
+
+def _dtype_name(x) -> str:
+    d = getattr(x, "dtype", x)
+    return getattr(d, "name", str(d))
+
+
+class KernelProfiler:
+    """Records kernel-level telemetry into a metrics registry."""
+
+    def __init__(self, registry=None):
+        if registry is None:
+            from repro.obs.metrics import get_registry
+            registry = get_registry()
+        self.registry = registry
+        r = registry
+        self.dispatches = r.counter(
+            "repro_kernel_dispatches_total",
+            "eager kernel launches", _LABELS)
+        self.traces = r.counter(
+            "repro_kernel_traces_total",
+            "kernel call sites hit during jax tracing (compile-side)",
+            _LABELS)
+        self.flops = r.counter(
+            "repro_kernel_flops_total",
+            "effective baseline-equivalent ops (Eq. 1)", _LABELS)
+        self.mults = r.counter(
+            "repro_kernel_mults_total",
+            "algo-specific multiplications (Eqs. 5/7 for fip/ffip)", _LABELS)
+        self.bytes = r.counter(
+            "repro_kernel_bytes_total",
+            "operand + result bytes moved", _LABELS)
+        self.measured_gops = r.gauge(
+            "repro_kernel_measured_gops",
+            "last measured achieved GOPS (tune harness)", _LABELS)
+        self.measured_seconds = r.histogram(
+            "repro_kernel_measured_seconds",
+            "measured kernel wall time (tune harness)", _LABELS,
+            buckets=_TIMING_BUCKETS)
+
+    # -- shape accounting ---------------------------------------------------
+    def _record(self, kernel: str, algo: str, dtype: str, *, traced: bool,
+                flops: float, mults: float, bytes_moved: float) -> None:
+        lab = dict(kernel=kernel, algo=algo, dtype=dtype)
+        if traced:
+            self.traces.labels(**lab).inc()
+            return
+        self.dispatches.labels(**lab).inc()
+        self.flops.labels(**lab).inc(flops)
+        self.mults.labels(**lab).inc(mults)
+        self.bytes.labels(**lab).inc(bytes_moved)
+
+    @staticmethod
+    def _gemm_work(m: int, k: int, n: int, algo: str,
+                   itemsize: int) -> Tuple[float, float, float]:
+        flops = analytical.baseline_mults(m, k, n) + \
+            analytical.baseline_adds(m, k, n)
+        if algo in ("fip", "ffip") and k % 2 == 0:
+            mults = analytical.fip_mults(m, k, n)
+        else:
+            mults = analytical.baseline_mults(m, k, n)
+        bytes_moved = (m * k + k * n + m * n) * itemsize
+        return float(flops), float(mults), float(bytes_moved)
+
+    def record_gemm(self, m: int, k: int, n: int, *, algo: str, dtype: Any,
+                    traced: bool = False, batch: int = 1) -> None:
+        f, mu, by = self._gemm_work(m, k, n, algo,
+                                    _itemsize(dtype))
+        self._record("gemm", algo, _dtype_name(dtype), traced=traced,
+                     flops=f * batch, mults=mu * batch,
+                     bytes_moved=by * batch)
+
+    def record_conv(self, *, batch: int, oh: int, ow: int, cin: int,
+                    kh: int, kw: int, cout: int, groups: int, algo: str,
+                    dtype: Any, traced: bool = False) -> None:
+        """Implicit-im2col conv == GEMM of (B*OH*OW) x (KH*KW*Cin/g) x
+        (Cout/g), per group."""
+        m = batch * oh * ow
+        kdim = kh * kw * (cin // max(groups, 1))
+        n = cout // max(groups, 1)
+        f, mu, by = self._gemm_work(m, kdim, n, algo, _itemsize(dtype))
+        g = max(groups, 1)
+        self._record("conv", algo, _dtype_name(dtype), traced=traced,
+                     flops=f * g, mults=mu * g, bytes_moved=by * g)
+
+    def record_flash(self, *, bh: int, sq: int, sk: int, d: int, dtype: Any,
+                     causal: bool = True, traced: bool = False) -> None:
+        """QK^T + PV: two (sq x d x sk)-class matmuls per batch*head;
+        causal halves the score rectangle."""
+        scale = 0.5 if causal and sq == sk else 1.0
+        per = 4.0 * sq * sk * d * scale          # 2 matmuls * 2 ops/MAC
+        by = (sq * d + 2 * sk * d + sq * d) * _itemsize(dtype)
+        self._record("flash", "dot", _dtype_name(dtype), traced=traced,
+                     flops=per * bh, mults=per * bh / 2.0,
+                     bytes_moved=float(by * bh))
+
+    # -- measured rates (tune harness) --------------------------------------
+    def record_timed(self, kernel: str, seconds: float, *, flops: float,
+                     algo: str = "ffip", dtype: Any = "float32") -> None:
+        lab = dict(kernel=kernel, algo=algo, dtype=_dtype_name(dtype))
+        self.measured_seconds.labels(**lab).observe(seconds)
+        if seconds > 0:
+            self.measured_gops.labels(**lab).set(flops / seconds * 1e-9)
+
+
+def _itemsize(dtype) -> int:
+    try:
+        import numpy as np
+        return int(np.dtype(getattr(dtype, "name", dtype)).itemsize)
+    except Exception:
+        return 4
+
+
+# -- module-level hooks (what the kernel call sites invoke) ------------------
+
+_profiler: Optional[KernelProfiler] = None
+_enabled = True
+
+
+def get_profiler() -> KernelProfiler:
+    global _profiler
+    if _profiler is None:
+        _profiler = KernelProfiler()
+    return _profiler
+
+
+def set_profiler(p: Optional[KernelProfiler]) -> Optional[KernelProfiler]:
+    """Swap the process profiler (tests inject one with a fresh registry);
+    returns the previous instance. ``None`` resets to lazy re-creation
+    against the (possibly swapped) default registry."""
+    global _profiler
+    prev, _profiler = _profiler, p
+    return prev
+
+
+def enable(on: bool = True) -> None:
+    global _enabled
+    _enabled = on
+
+
+def on_gemm(a, b, algo: str) -> None:
+    """Hook called by ``kernels.ops.matmul`` — must never raise."""
+    if not _enabled:
+        return
+    try:
+        *lead, m, k = a.shape
+        n = b.shape[-1]
+        batch = 1
+        for d in lead:
+            batch *= int(d)
+        get_profiler().record_gemm(int(m), int(k), int(n), algo=algo,
+                                   dtype=a.dtype, traced=_is_tracer(a, b),
+                                   batch=max(batch, 1))
+    except Exception:
+        pass
+
+
+def on_conv(x, kernel, *, oh: int, ow: int, groups: int, algo: str) -> None:
+    """Hook called by ``kernels.conv_gemm.conv_gemm_fused``."""
+    if not _enabled:
+        return
+    try:
+        b, _, _, cin = x.shape
+        kh, kw, _, cout = kernel.shape
+        get_profiler().record_conv(
+            batch=int(b), oh=int(oh), ow=int(ow), cin=int(cin), kh=int(kh),
+            kw=int(kw), cout=int(cout), groups=groups, algo=algo,
+            dtype=x.dtype, traced=_is_tracer(x, kernel))
+    except Exception:
+        pass
+
+
+def on_flash(q, k, *, causal: bool) -> None:
+    """Hook called by ``kernels.flash_attention.flash_attention``."""
+    if not _enabled:
+        return
+    try:
+        bh, sq, d = q.shape
+        sk = k.shape[-2]
+        get_profiler().record_flash(bh=int(bh), sq=int(sq), sk=int(sk),
+                                    d=int(d), dtype=q.dtype, causal=causal,
+                                    traced=_is_tracer(q, k))
+    except Exception:
+        pass
+
+
+# -- cost derivation / compile-event unification -----------------------------
+
+def dispatch_cost(fn, *args) -> Optional[Tuple[float, float]]:
+    """(flops, bytes) for one dispatch of ``fn(*args)`` via the jaxpr cost
+    model in ``launch/costs.py``. Returns None when tracing fails (cost
+    accounting must never break serving). NOTE: tracing a jit-wrapped fn
+    re-runs its python body — callers that carry compile counters (the
+    batcher) must pass the underlying impl, not the jitted wrapper."""
+    try:
+        from repro.launch import costs
+        c = costs.fn_cost(fn, *args)
+        return float(c.flops), float(c.bytes)
+    except Exception:
+        return None
+
+
+def compile_snapshot() -> Dict[str, Dict[str, int]]:
+    """One dict unifying every compile-side counter in the codebase:
+
+    - ``derived_cache``: ``kernels/compat.DerivedCache.stats`` (computed /
+      hits / seeded weight-transform cache entries)
+    - ``schedule_cache``: ``repro.tune.stats`` (tuned-schedule lookups)
+    - ``measure``: ``tune/measure.counters`` (candidates timed / failed)
+
+    Lazy imports; a missing subsystem contributes ``{}`` instead of raising.
+    """
+    out: Dict[str, Dict[str, int]] = {}
+    try:
+        from repro.kernels import compat
+        out["derived_cache"] = dict(compat.derived.stats)
+    except Exception:
+        out["derived_cache"] = {}
+    try:
+        import repro.tune as tune
+        out["schedule_cache"] = dict(tune.stats)
+    except Exception:
+        out["schedule_cache"] = {}
+    try:
+        from repro.tune import measure
+        out["measure"] = dict(measure.counters)
+    except Exception:
+        out["measure"] = {}
+    return out

@@ -55,18 +55,19 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core.gemm import GemmConfig, use_gemm
 from repro.dist import context as dist_context
 from repro.dist import sharding as dist_sharding
 from repro.models.model import Model
 from repro.models.transformer import paged_cache_supported
+from repro.obs.trace import Tracer
 from repro.serve.lifecycle import AdmissionImpossibleError, ServeStallError
 from repro.serve.paged import (PageAllocator, PrefixIndex, page_keys,
                                partial_key)
@@ -154,7 +155,9 @@ class BatchServer:
                  prefill_chunk: Optional[int] = None,
                  paged_attention: str = "gather",
                  prefix_sharing: bool = True, mesh=None,
-                 moe_partition: str = "expert", prepared=None):
+                 moe_partition: str = "expert", prepared=None,
+                 clock=None, registry=None, tracer=None,
+                 trace_capacity: int = 4096):
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
         if decode_chunk < 1:
@@ -192,6 +195,21 @@ class BatchServer:
         self.mesh = mesh
         self.moe_partition = moe_partition
         self.prepared = prepared
+        # -- observability (repro.obs) --------------------------------------
+        # Every wall-clock read in this class goes through `_clock` — inject
+        # a serve.faults.FakeClock (like ReplicaRouter takes) and all stats /
+        # histograms / span timestamps become deterministic on fake time.
+        self._clock = clock if clock is not None else obs.default_clock
+        self.registry = (registry if registry is not None
+                         else obs.get_registry())
+        self.tracer = tracer if tracer is not None else Tracer(
+            clock=self._clock, capacity=trace_capacity)
+        # The router relabels per replica via set_obs_labels() and sets
+        # trace_requests=False (it owns the per-rid root "request" span —
+        # two roots per rid would split the tree).
+        self.trace_requests = True
+        self._req_spans: Dict[int, Any] = {}
+        self.set_obs_labels({"replica": "solo"})
         self.slots = [_Slot() for _ in range(batch_slots)]
         self._queue: "collections.deque[Request]" = collections.deque()
         self._completed: List[Request] = []
@@ -231,7 +249,6 @@ class BatchServer:
             self.alloc = PageAllocator(self.num_pages)
             self.prefix = PrefixIndex(self.alloc)
             self._reserved = 0          # pages promised to admitted requests
-            self.events: List[Tuple] = []   # dispatch interleaving log
             self.cache = model.init_paged_cache(self.num_pages, page_size)
             self._bucketed = False
             self._batch_axes = None
@@ -297,6 +314,16 @@ class BatchServer:
 
     @staticmethod
     def _fresh_stats() -> Dict[str, Any]:
+        """Reset contract (enforced by test_obs): EVERY key in this dict is
+        PER-DRAIN — :meth:`run_until_drained` replaces ``self.stats`` with a
+        fresh copy at entry, so after a drain the dict describes that drain
+        only (``pages_peak`` is the peak within the drain: the allocator's
+        lifetime peak lives in ``alloc.peak_in_use``). Cumulative-across-
+        drains state lives elsewhere, by design: ``compiles`` (jit cache is
+        a server-lifetime property), the ``repro.obs`` metrics this class
+        mirrors into (monotone counters/histograms in ``self.registry``),
+        and the span ring in ``self.tracer``. Per-tick callers
+        (:meth:`step` via the router) never reset anything."""
         return {"prefill_s": 0.0, "decode_s": 0.0, "steps": 0,
                 "prefill_tokens": 0, "decode_tokens": 0,
                 "prefill_dispatches": 0, "decode_dispatches": 0,
@@ -307,6 +334,77 @@ class BatchServer:
                 "host_bytes_page_tables": 0, "prefill_chunks": 0,
                 "prefix_hit_tokens": 0, "cow_copies": 0,
                 "pages_in_use": 0, "pages_peak": 0}
+
+    # -- observability ------------------------------------------------------
+    def set_obs_labels(self, labels: Dict[str, str]) -> None:
+        """(Re)bind this server's metric children. Standalone servers carry
+        ``{"replica": "solo"}``; the router rebinds each to its index."""
+        self.obs_labels = dict(labels)
+        r = self.registry
+        rep = self.obs_labels.get("replica", "solo")
+        lab = ("replica", "phase")
+        self._m_dispatch = {
+            p: r.counter("serve_dispatches_total",
+                         "device dispatches", lab).labels(replica=rep,
+                                                          phase=p)
+            for p in ("prefill", "decode")}
+        self._m_tokens = {
+            p: r.counter("serve_tokens_total",
+                         "tokens prefilled / decoded", lab).labels(
+                             replica=rep, phase=p)
+            for p in ("prefill", "decode")}
+        self._m_dispatch_s = {
+            p: r.histogram("serve_dispatch_seconds",
+                           "wall time per device dispatch", lab).labels(
+                               replica=rep, phase=p)
+            for p in ("prefill", "decode")}
+        self._m_compiles = {
+            p: r.counter("serve_compiles_total",
+                         "jit traces (server-lifetime, never reset)",
+                         lab).labels(replica=rep, phase=p)
+            for p in ("prefill", "decode")}
+        self._m_host_bytes = {
+            p: r.counter("serve_host_bytes_total",
+                         "bytes crossing the device->host boundary", lab)
+            .labels(replica=rep, phase=p)
+            for p in ("prefill", "decode", "page_tables")}
+        self._m_e2e = r.histogram(
+            "serve_request_e2e_seconds", "submit -> done", ("replica",)
+        ).labels(replica=rep)
+        self._m_ttft = r.histogram(
+            "serve_request_ttft_seconds", "submit -> first token",
+            ("replica",)).labels(replica=rep)
+        self._m_pages = r.gauge(
+            "serve_pages_in_use", "page-pool pages currently referenced",
+            ("replica",)).labels(replica=rep)
+        self._m_prefix_hits = r.counter(
+            "serve_prefix_hit_tokens_total",
+            "prompt tokens skipped via prefix sharing", ("replica",)
+        ).labels(replica=rep)
+        self._m_cow = r.counter(
+            "serve_cow_copies_total", "copy-on-write page copies",
+            ("replica",)).labels(replica=rep)
+
+    @property
+    def events(self) -> List[Tuple]:
+        """Legacy dispatch-interleaving view, reconstructed from the span
+        ring: ``("prefill_chunk", rid, start, end)`` and
+        ``("decode", (rids...))`` tuples in dispatch order. Bounded by the
+        tracer's ring capacity (the old append-only list grew without limit
+        on long-running servers)."""
+        out: List[Tuple] = []
+        for s in self.tracer.spans:
+            if s.name == "prefill_chunk":
+                out.append(("prefill_chunk", s.attrs["rid_int"],
+                            s.attrs["start"], s.attrs["end"]))
+            elif s.name == "decode" and "rids" in s.attrs:
+                out.append(("decode", tuple(s.attrs["rids"])))
+        return out
+
+    def _end_req_span(self, rid: int, **attrs) -> None:
+        span = self._req_spans.pop(rid, None)
+        if span is not None:
+            self.tracer.end(span, **attrs)
 
     # -- quantized decode mode / mesh scope --------------------------------
     def _gemm_scope(self):
@@ -355,17 +453,20 @@ class BatchServer:
     # -- device programs ---------------------------------------------------
     def _decode_impl(self, params, last, cache, pos, live, rem, eos):
         self.compiles["decode"] += 1    # side effect runs at trace time only
+        self._m_compiles["decode"].inc()
         return self.model.sample_steps(params, last, cache, pos, live, rem,
                                        eos, steps=self.decode_chunk)
 
     def _prefill_bucket_impl(self, params, tokens, cache, lengths, mask):
         self.compiles["prefill"] += 1   # once per bucket length
+        self._m_compiles["prefill"].inc()
         return self.model.prefill_sample(params, tokens, cache, lengths, mask)
 
     def _prefill_impl(self, params, tokens, cache, slot_idx):
         # fallback (SSM/hybrid/enc-dec caches): run a batch-1 forward and
         # scatter its cache rows into slot_idx; argmax fused on device.
         self.compiles["prefill"] += 1   # once per distinct prompt length
+        self._m_compiles["prefill"].inc()
         one_cache = self.model.init_cache(1, self.max_len)
         new_one, logits = self.model.prefill(params, tokens, one_cache)
 
@@ -381,6 +482,7 @@ class BatchServer:
     def _decode_paged_impl(self, params, last, cache, pos, live, rem, eos,
                            page_table):
         self.compiles["decode"] += 1
+        self._m_compiles["decode"].inc()
         return self.model.sample_steps(
             params, last, cache, pos, live, rem, eos,
             steps=self.decode_chunk, page_table=page_table,
@@ -389,6 +491,7 @@ class BatchServer:
     def _prefill_chunk_impl(self, params, tokens, cache, page_table, offset,
                             valid_len, write_start):
         self.compiles["prefill"] += 1   # one entry total: fixed chunk width
+        self._m_compiles["prefill"].inc()
         return self.model.prefill_chunk_paged(
             params, tokens, cache, page_table, offset, valid_len,
             write_start, paged_impl=self.paged_attention)
@@ -443,7 +546,7 @@ class BatchServer:
                     f"request {req.rid}: needs {pages} pages worst-case "
                     f"({rows} rows / page_size {self.page_size}) but the "
                     f"pool holds only {self.num_pages}")
-        req.t_submit = time.perf_counter()
+        req.t_submit = self._clock()
         key = self._req_key(req)
         inflight = self._find_inflight(req.rid)
         if inflight is not None:
@@ -462,17 +565,26 @@ class BatchServer:
                     f"rid {req.rid} resubmitted with a different "
                     f"prompt/budget than its cached completion")
             req.out_tokens = list(toks)
-            req.t_first = req.t_done = time.perf_counter()
+            req.t_first = req.t_done = self._clock()
+            self.tracer.event("request", rid=str(req.rid), cached=True)
             self._cached_hits.append(req)
             return
         req.out_tokens = []
+        if self.trace_requests and req.rid not in self._req_spans:
+            self._req_spans[req.rid] = self.tracer.start(
+                "request", rid=str(req.rid), prompt=len(req.prompt),
+                max_new_tokens=req.max_new_tokens)
         self._queue.append(req)
 
     def has_queued(self) -> bool:
         return bool(self._queue)
 
     def _finish(self, req: Request):
-        req.t_done = time.perf_counter()
+        req.t_done = self._clock()
+        self._m_e2e.observe(req.t_done - req.t_submit)
+        if req.t_first:
+            self._m_ttft.observe(req.t_first - req.t_submit)
+        self._end_req_span(req.rid, tokens=len(req.out_tokens))
         self._completed.append(req)
         self._results[req.rid] = (self._req_key(req), list(req.out_tokens))
         self._results.move_to_end(req.rid)
@@ -519,6 +631,8 @@ class BatchServer:
         # first-class queued requests (their payload is identical).
         for w in self._dup_waiters.pop(rid, []):
             self._queue.appendleft(w)
+        if found:
+            self._end_req_span(rid, aborted=True)
         return found
 
     # -- router-facing load/health introspection ---------------------------
@@ -562,7 +676,7 @@ class BatchServer:
     def _place(self, slot_i: int, req: Request, first: int):
         """Post-prefill bookkeeping shared by all prefill paths."""
         req.out_tokens.append(first)
-        req.t_first = time.perf_counter()
+        req.t_first = self._clock()
         slot = self.slots[slot_i]
         if req.max_new_tokens <= 1 or first == req.eos_id:
             # finished at prefill (token budget of 1, or EOS on the first
@@ -622,30 +736,46 @@ class BatchServer:
             lengths[slot_i] = n
             mask[slot_i] = True
             self.stats["prefill_tokens"] += n
-        t0 = time.perf_counter()
+        span = self.tracer.start("prefill", bucket=bucket,
+                                 rids=[r.rid for r in batch])
+        t0 = self._clock()
         with self._gemm_scope():
             self.cache, first = self._prefill_bucket(
                 params, jnp.asarray(tokens), self.cache,
                 jnp.asarray(lengths), jnp.asarray(mask))
         first_h = np.asarray(jax.device_get(first))     # (B,) int32
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        dt = self._clock() - t0
+        self.tracer.end(span)
+        self.stats["prefill_s"] += dt
         self.stats["prefill_dispatches"] += 1
         self.stats["host_bytes_prefill"] += int(first_h.nbytes)
+        self._m_dispatch["prefill"].inc()
+        self._m_dispatch_s["prefill"].observe(dt)
+        self._m_tokens["prefill"].inc(sum(len(r.prompt) for r in batch))
+        self._m_host_bytes["prefill"].inc(int(first_h.nbytes))
         for slot_i, req in zip(free, batch):
             self._place(slot_i, req, int(first_h[slot_i]))
 
     def _admit_one(self, params, slot_i: int):
         req = self._queue.popleft()
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        t0 = time.perf_counter()
+        span = self.tracer.start("prefill", rid=str(req.rid),
+                                 tokens=len(req.prompt))
+        t0 = self._clock()
         with self._gemm_scope():
             self.cache, first = self._prefill_one(params, toks, self.cache,
                                                   slot_i)
         first_h = int(jax.device_get(first))
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        dt = self._clock() - t0
+        self.tracer.end(span)
+        self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += len(req.prompt)
         self.stats["prefill_dispatches"] += 1
         self.stats["host_bytes_prefill"] += 4
+        self._m_dispatch["prefill"].inc()
+        self._m_dispatch_s["prefill"].observe(dt)
+        self._m_tokens["prefill"].inc(len(req.prompt))
+        self._m_host_bytes["prefill"].inc(4)
         self._place(slot_i, req, first_h)
 
     # -- paged mode --------------------------------------------------------
@@ -712,6 +842,8 @@ class BatchServer:
             return False
         self._reserved += worst
         self.stats["prefix_hit_tokens"] += hit
+        if hit:
+            self._m_prefix_hits.inc(hit)
         seq = _PagedSeq(
             n=n, pages=attached, keys=keys, pkey=pkey, filled=hit,
             # a fully shared prompt still recomputes its LAST token: the
@@ -753,6 +885,7 @@ class BatchServer:
                 self.alloc.decref(old)
                 seq.pages[li] = new
                 self.stats["cow_copies"] += 1
+                self._m_cow.inc()
 
     def _register_prefix(self, seq: _PagedSeq, upto_rows: int):
         """Publish every FULL prompt page whose rows are all filled."""
@@ -803,7 +936,10 @@ class BatchServer:
             tokens[0, :end - start] = slot.req.prompt[start:end]
             pt = np.zeros((1, self.max_pages), np.int32)
             pt[0, :len(seq.pages)] = seq.pages
-            t0 = time.perf_counter()
+            span = self.tracer.start("prefill_chunk", rid=str(slot.req.rid),
+                                     rid_int=slot.req.rid, start=start,
+                                     end=end)
+            t0 = self._clock()
             with self._gemm_scope():
                 self.cache, tok = self._prefill_chunk_fn(
                     params, jnp.asarray(tokens), self.cache, jnp.asarray(pt),
@@ -814,12 +950,18 @@ class BatchServer:
             if last_chunk:                   # token only meaningful here
                 first = int(jax.device_get(tok))
                 self.stats["host_bytes_prefill"] += 4
-            self.stats["prefill_s"] += time.perf_counter() - t0
+                self._m_host_bytes["prefill"].inc(4)
+            dt = self._clock() - t0
+            self.tracer.end(span)
+            self.stats["prefill_s"] += dt
             self.stats["prefill_tokens"] += end - start
             self.stats["prefill_dispatches"] += 1
             self.stats["prefill_chunks"] += 1
             self.stats["host_bytes_page_tables"] += int(pt.nbytes)
-            self.events.append(("prefill_chunk", slot.req.rid, start, end))
+            self._m_dispatch["prefill"].inc()
+            self._m_dispatch_s["prefill"].observe(dt)
+            self._m_tokens["prefill"].inc(end - start)
+            self._m_host_bytes["page_tables"].inc(int(pt.nbytes))
             seq.compute_next = end
             seq.filled = max(seq.filled, end)
             self._register_prefix(seq, seq.filled)
@@ -831,6 +973,7 @@ class BatchServer:
     def _refresh_page_stats(self):
         self.stats["pages_in_use"] = self.alloc.in_use
         self.stats["pages_peak"] = self.alloc.peak_in_use
+        self._m_pages.set(self.alloc.in_use)
 
     # -- decode ------------------------------------------------------------
     def step(self, params) -> int:
@@ -870,6 +1013,9 @@ class BatchServer:
         # with unchanged values, so the cache stays bit-identical to
         # sequential decode across the whole chunk. (Paged mode instead GATES
         # frozen slots' writes off — pool rows can be shared.)
+        span = self.tracer.start(
+            "decode", rids=[self.slots[i].req.rid for i in active],
+            chunk=self.decode_chunk)
         if self.paged:
             for i in active:
                 slot = self.slots[i]
@@ -880,26 +1026,30 @@ class BatchServer:
             for i in active:
                 seq = self.slots[i].seq
                 pt[i, :len(seq.pages)] = seq.pages
-            self.events.append(
-                ("decode", tuple(self.slots[i].req.rid for i in active)))
-            t0 = time.perf_counter()
+            t0 = self._clock()
             with self._gemm_scope():
                 self.cache, toks = self._decode_paged(
                     params, jnp.asarray(last), self.cache,
                     jnp.asarray(pos), jnp.asarray(live), jnp.asarray(rem),
                     jnp.asarray(eos), jnp.asarray(pt))
             self.stats["host_bytes_page_tables"] += int(pt.nbytes)
+            self._m_host_bytes["page_tables"].inc(int(pt.nbytes))
         else:
-            t0 = time.perf_counter()
+            t0 = self._clock()
             with self._gemm_scope():
                 self.cache, toks = self._decode(
                     params, jnp.asarray(last), self.cache,
                     jnp.asarray(pos), jnp.asarray(live), jnp.asarray(rem),
                     jnp.asarray(eos))
         toks_h = np.asarray(jax.device_get(toks))       # (chunk, B) int32
-        self.stats["decode_s"] += time.perf_counter() - t0
+        dt = self._clock() - t0
+        self.tracer.end(span)
+        self.stats["decode_s"] += dt
         self.stats["decode_dispatches"] += 1
         self.stats["host_bytes_decode"] += int(toks_h.nbytes)
+        self._m_dispatch["decode"].inc()
+        self._m_dispatch_s["decode"].observe(dt)
+        self._m_host_bytes["decode"].inc(int(toks_h.nbytes))
         # replay the device's (eos, remaining) bookkeeping on the host to
         # recover which of the chunk tokens were actually emitted per slot.
         for j in range(toks_h.shape[0]):
@@ -921,6 +1071,7 @@ class BatchServer:
             if emitted:
                 self.stats["steps"] += 1
                 self.stats["decode_tokens"] += emitted
+                self._m_tokens["decode"].inc(emitted)
         if self.paged:
             self._refresh_page_stats()
         return len(active) + prefill_work

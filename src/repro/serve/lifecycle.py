@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class Lifecycle(enum.Enum):
@@ -150,6 +150,11 @@ class RequestRecord:
     t_submit: float = 0.0
     t_done: float = 0.0
     history: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    # observability hook: called AFTER every state change with
+    # (record, new_state, t). The router installs one that mirrors the state
+    # machine into obs phase spans; the record itself stays telemetry-free.
+    observer: Optional[Callable[["RequestRecord", "Lifecycle", float], None]] \
+        = dataclasses.field(default=None, repr=False, compare=False)
 
     def transition(self, state: Lifecycle, t: float):
         if self.state in TERMINAL:
@@ -158,6 +163,8 @@ class RequestRecord:
                 f"{self.state.value} -> {state.value} (terminal is final)")
         self.state = state
         self.history.append((state.value, t))
+        if self.observer is not None:
+            self.observer(self, state, t)
 
     @property
     def terminal(self) -> bool:

@@ -51,6 +51,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import repro.obs as obs
+from repro.obs.trace import Tracer
 from repro.serve import lifecycle as lc
 from repro.serve.batcher import BatchServer, Request
 from repro.serve.faults import FaultPlan, FaultSpec, InjectedFault
@@ -99,7 +101,8 @@ class ReplicaRouter:
                  cfg: Optional[RouterConfig] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  clock=None, rng=None,
-                 watchdog_cfg: Optional[WatchdogConfig] = None):
+                 watchdog_cfg: Optional[WatchdogConfig] = None,
+                 registry=None, tracer=None):
         if not servers:
             raise ValueError("need at least one replica")
         self.cfg = cfg or RouterConfig()
@@ -126,14 +129,76 @@ class ReplicaRouter:
             "shed_to_quantized": 0, "quarantines": 0, "probes": 0,
             "probe_successes": 0, "duplicate_emissions_dropped": 0,
         }
+        # -- observability --------------------------------------------------
+        # One tracer for the whole fleet: the router owns the per-rid root
+        # "request" span and the lifecycle phase spans under it; the replicas
+        # share the SAME tracer (and the router's clock), so their dispatch
+        # spans land in the same ring with the same timebase and
+        # span_tree(rid) reconstructs the full journey.
+        self.registry = (registry if registry is not None
+                         else obs.get_registry())
+        self.tracer = tracer if tracer is not None else Tracer(
+            clock=self._now)
+        self._spans: Dict[int, Dict[str, Any]] = {}
+        self._m_events = self.registry.counter(
+            "router_events_total", "router lifecycle / fault events",
+            ("kind",))
+        self._m_queue_depth = self.registry.gauge(
+            "router_queue_depth", "non-terminal requests in the router queue")
+        self._m_e2e = self.registry.histogram(
+            "router_request_e2e_seconds",
+            "submit -> DONE on the router clock")
+        for i, s in enumerate(servers):
+            s.tracer = self.tracer
+            s.trace_requests = False     # router owns the root request span
+            s.set_obs_labels({"replica": str(i)})
         self.dog = Watchdog(
             watchdog_cfg or WatchdogConfig(), clock=self._now,
+            registry=self.registry, loop="serve",
             on_straggler=lambda step, dt, ema: self.events.append(
                 ("straggler_tick", step, dt, ema)))
 
     # -- time --------------------------------------------------------------
     def _now(self) -> float:
-        return self.clock() if self.clock is not None else time.monotonic()
+        return self.clock() if self.clock is not None else obs.default_clock()
+
+    # -- observability helpers ---------------------------------------------
+    def _bump(self, kind: str, n: int = 1) -> None:
+        """stats dict (legacy surface) + obs counter mirror, one call."""
+        self.stats[kind] = self.stats.get(kind, 0) + n
+        self._m_events.labels(kind=kind).inc(n)
+
+    def _root_sid(self, rid: int) -> Optional[int]:
+        entry = self._spans.get(rid)
+        root = entry.get("root") if entry else None
+        return root.sid if root is not None else None
+
+    def _on_transition(self, rec: lc.RequestRecord, state: lc.Lifecycle,
+                       t: float) -> None:
+        """Lifecycle observer: phase spans mirror the state machine — each
+        non-terminal state is an open child span of the rid's root request
+        span; a terminal state closes both."""
+        rid = rec.req.rid
+        entry = self._spans.get(rid)
+        if entry is None:
+            return
+        phase = entry.pop("phase", None)
+        if phase is not None:
+            self.tracer.end(phase)
+        if state in lc.TERMINAL:
+            root = entry.pop("root", None)
+            if root is not None:
+                self.tracer.end(
+                    root, outcome=state.value, attempts=rec.attempts,
+                    tier=rec.tier,
+                    error=(type(rec.error).__name__ if rec.error else None))
+            self._spans.pop(rid, None)
+            if state == lc.Lifecycle.DONE:
+                self._m_e2e.observe(t - rec.t_submit)
+        else:
+            entry["phase"] = self.tracer.start(
+                state.value, parent=self._root_sid(rid), rid=str(rid),
+                replica=rec.replica, attempt=rec.attempts)
 
     # -- submission / admission control ------------------------------------
     def _fits_anywhere(self, req: Request) -> bool:
@@ -162,7 +227,7 @@ class ReplicaRouter:
                 raise lc.AdmissionImpossibleError(
                     f"rid {req.rid} resubmitted with a different "
                     f"prompt/budget")
-            self.stats["dedup_submits"] += 1
+            self._bump("dedup_submits")
             return rec
         if not self._fits_anywhere(req):
             raise lc.AdmissionImpossibleError(
@@ -172,7 +237,7 @@ class ReplicaRouter:
         depth = sum(1 for rid in self._rq
                     if not self.records[rid].terminal)
         if depth >= self.cfg.max_queue:
-            self.stats["rejected"] += 1
+            self._bump("rejected")
             raise lc.RejectedError(
                 f"router queue full ({depth}/{self.cfg.max_queue})",
                 retry_after_s=self.cfg.backoff_base_s * (1 + depth))
@@ -181,9 +246,18 @@ class ReplicaRouter:
         rec = lc.RequestRecord(req=req, t_submit=now,
                                deadline=None if d is None else now + d)
         rec.history.append((lc.Lifecycle.QUEUED.value, now))
+        rec.observer = self._on_transition
+        root = self.tracer.start("request", rid=str(req.rid),
+                                 prompt=len(req.prompt),
+                                 max_new_tokens=req.max_new_tokens)
+        self._spans[req.rid] = {
+            "root": root,
+            "phase": self.tracer.start("queued", parent=root.sid,
+                                       rid=str(req.rid), attempt=0),
+        }
         self.records[req.rid] = rec
         self._rq.append(req.rid)
-        self.stats["submitted"] += 1
+        self._bump("submitted")
         return rec
 
     # -- drive loop --------------------------------------------------------
@@ -204,6 +278,8 @@ class ReplicaRouter:
                 continue
             self._drive_replica(r)
         self.dog.observe(self.ticks, self._now() - t0)
+        self._m_queue_depth.set(
+            sum(1 for rid in self._rq if not self.records[rid].terminal))
         return bool(self._rq) or any(r.outstanding for r in self.replicas)
 
     def drive(self, *, max_ticks: int = 10_000) -> Dict[int, lc.RequestRecord]:
@@ -246,7 +322,7 @@ class ReplicaRouter:
                 r.outstanding.pop(rec.req.rid, None)
             rec.error = lc.DeadlineExceededError(why, phase=rec.state.value)
             rec.transition(lc.Lifecycle.TIMED_OUT, now)
-            self.stats["timed_out"] += 1
+            self._bump("timed_out")
             self.events.append(("timed_out", rec.req.rid, rec.state.value))
 
     # -- health ------------------------------------------------------------
@@ -255,7 +331,7 @@ class ReplicaRouter:
             if r.state == QUARANTINED and now >= r.quarantined_until:
                 r.state = PROBING
                 r.consec_failures = 0
-                self.stats["probes"] += 1
+                self._bump("probes")
                 self.events.append(("probe", r.idx, self.ticks))
 
     def _quarantine(self, r: _Replica, cause: BaseException):
@@ -263,7 +339,7 @@ class ReplicaRouter:
         cool = self.cfg.quarantine_s * (2 ** (r.quarantine_count - 1))
         r.state = QUARANTINED
         r.quarantined_until = self._now() + cool
-        self.stats["quarantines"] += 1
+        self._bump("quarantines")
         self.events.append(("quarantine", r.idx, self.ticks, cool))
         # drain: every request still on the replica goes back to the queue
         err = lc.ReplicaFailedError(
@@ -291,13 +367,16 @@ class ReplicaRouter:
                 f"request {rec.req.rid} gave up",
                 attempts=rec.attempts + 1, cause=err)
             rec.transition(lc.Lifecycle.FAILED, now)
-            self.stats["failed"] += 1
+            self._bump("failed")
             return
         rec.attempts += 1
-        self.stats["retries"] += 1
+        self._bump("retries")
         backoff = self.cfg.backoff_base_s * (2 ** (rec.attempts - 1))
         backoff *= 1.0 + self.cfg.backoff_jitter * float(self.rng.random())
         rec.next_eligible = now + backoff
+        self.tracer.event("retry", parent=self._root_sid(rec.req.rid),
+                          rid=str(rec.req.rid), attempt=rec.attempts,
+                          error=type(err).__name__, backoff_s=backoff)
         rec.transition(lc.Lifecycle.QUEUED, now)
         self._rq.append(rec.req.rid)
         self.events.append(("retry", rec.req.rid, rec.attempts,
@@ -326,7 +405,7 @@ class ReplicaRouter:
             rec.replica = r.idx
             rec.transition(lc.Lifecycle.ADMITTED, now)
             r.outstanding[rid] = rec
-            self.stats["dispatched"] += 1
+            self._bump("dispatched")
         self._rq.extend(held)
 
     def _pick(self, rec: lc.RequestRecord,
@@ -364,7 +443,7 @@ class ReplicaRouter:
             pool = cands
         best = min(pool, key=lambda r: (r.server.outstanding_rows(), r.idx))
         if self._mixed and best.tier == "int8":
-            self.stats["shed_to_quantized"] += 1
+            self._bump("shed_to_quantized")
             self.events.append(("shed", rec.req.rid, best.idx))
         return best
 
@@ -405,7 +484,7 @@ class ReplicaRouter:
             else:
                 r.server.step(r.params)
         except Exception as e:     # noqa: BLE001 — any step failure fails over
-            self.stats["replica_failures"] += 1
+            self._bump("replica_failures")
             r.consec_failures += 1
             self.events.append(("replica_failure", r.idx, self.ticks,
                                 type(e).__name__))
@@ -420,7 +499,7 @@ class ReplicaRouter:
             return
         elapsed = self._now() - t0
         if elapsed > self.cfg.step_timeout_s:
-            self.stats["replica_failures"] += 1
+            self._bump("replica_failures")
             r.consec_failures += 1
             self.events.append(("replica_hang", r.idx, self.ticks, elapsed))
             err = lc.ReplicaFailedError(
@@ -452,7 +531,7 @@ class ReplicaRouter:
         if rec is None or rec.terminal:
             # late completion of an aborted/retried/timed-out request:
             # never re-emitted (the duplicate-emission guard)
-            self.stats["duplicate_emissions_dropped"] += 1
+            self._bump("duplicate_emissions_dropped")
             return True
         defect = lc.output_sanity_error(
             creq.out_tokens, vocab=r.server.model.cfg.vocab,
@@ -460,7 +539,7 @@ class ReplicaRouter:
         if defect is not None:
             r.server.abort(creq.rid)     # drop the poisoned cached result
             r.consec_failures += 1
-            self.stats["poisoned"] += 1
+            self._bump("poisoned")
             self.events.append(("poisoned", r.idx, creq.rid))
             err = lc.PoisonedOutputError(
                 f"replica {r.idx} request {creq.rid}: {defect}")
@@ -471,11 +550,11 @@ class ReplicaRouter:
         rec.tier = r.tier
         rec.t_done = now
         rec.transition(lc.Lifecycle.DONE, now)
-        self.stats["completed"] += 1
+        self._bump("completed")
         if r.state == PROBING:
             r.state = HEALTHY
             r.quarantine_count = 0       # successful probe resets the cool-
-            self.stats["probe_successes"] += 1   # down exponent too
+            self._bump("probe_successes")   # down exponent too
             self.events.append(("probe_success", r.idx, self.ticks))
         return True
 

@@ -2,7 +2,11 @@
 
 The EMA/dead-man logic now lives in the shared :mod:`repro.watchdog` (the
 serving replica router drives the SAME implementation against its tick
-clock); this module keeps the training-facing names stable.
+clock); this module keeps the training-facing names stable. The alias
+carries ZERO logic of its own — it only defaults the telemetry label to
+``loop="train"`` so the shared module's obs counters distinguish the two
+consumers; ``observe``/``check_hang`` are the shared methods, verbatim
+(test_obs pins this so the old double-bookkeeping can't creep back).
 """
 from __future__ import annotations
 
@@ -13,3 +17,7 @@ __all__ = ["HangError", "StepWatchdog", "WatchdogConfig"]
 
 class StepWatchdog(Watchdog):
     """Training-loop alias of the shared watchdog (real clock by default)."""
+
+    def __init__(self, *args, **kwargs):
+        kwargs.setdefault("loop", "train")
+        super().__init__(*args, **kwargs)

@@ -25,8 +25,20 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels.compat import resolve_interpret
+from repro.obs import profile as _obs_profile
 
 counters: Dict[str, int] = {"timed_candidates": 0, "failed_candidates": 0}
+
+
+def _record_timed(kernel: str, seconds: float, *, flops: float, algo: str,
+                  dtype) -> None:
+    """Mirror a measured candidate into obs (achieved GOPS gauge + wall-time
+    histogram). Telemetry must never fail a tuning run."""
+    try:
+        _obs_profile.get_profiler().record_timed(
+            kernel, seconds, flops=flops, algo=algo, dtype=dtype)
+    except Exception:               # noqa: BLE001
+        pass
 
 
 def median_time_s(fn: Callable, *args, iters: int = 3) -> float:
@@ -62,7 +74,12 @@ def time_gemm_blocks(algo: str, a: jax.Array, b: jax.Array,
     counters["timed_candidates"] += 1
     fn = lambda a_, b_: kops.matmul(a_, b_, algo=algo, bm=bm, bn=bn, bk=bk,
                                     interpret=resolve_interpret(interpret))
-    return median_time_s(fn, a, b, iters=iters)
+    t = median_time_s(fn, a, b, iters=iters)
+    m, k = a.shape[-2], a.shape[-1]
+    n = b.shape[-1]
+    _record_timed("gemm", t, flops=2.0 * m * k * n - m * n, algo=algo,
+                  dtype=a.dtype)
+    return t
 
 
 def best_gemm_blocks(algo: str, m: int, k: int, n: int, dtype,
@@ -118,7 +135,18 @@ def time_conv_blocks(algo: str, x: jax.Array, kernel: jax.Array,
     fn = lambda x_, k_: conv_gemm.conv_gemm_fused(
         x_, k_, stride=stride, pad=pad, groups=groups, algo=algo,
         bm=bm, bn=bn, bk=bk, interpret=resolve_interpret(interpret))
-    return median_time_s(fn, x, kernel, iters=iters)
+    t = median_time_s(fn, x, kernel, iters=iters)
+    from repro.core.im2col import as_pair
+    b, h, w, cin = x.shape
+    kh, kw, _, cout = kernel.shape
+    sh, sw = as_pair(stride)
+    ph, pw = as_pair(pad)
+    g = max(groups, 1)
+    m = b * ((h + 2 * ph - kh) // sh + 1) * ((w + 2 * pw - kw) // sw + 1)
+    kdim, n = kh * kw * (cin // g), cout // g
+    _record_timed("conv", t, flops=(2.0 * m * kdim * n - m * n) * g,
+                  algo=algo, dtype=x.dtype)
+    return t
 
 
 def best_conv_blocks(algo: str, batch: int, h: int, w: int, cin: int,
@@ -180,6 +208,9 @@ def best_flash_blocks(bh: int, sq: int, sk: int, d: int, dtype,
             fn = lambda q_, k_, v_: flash_attention(q_, k_, v_, 0, True, itp,
                                                     bq, bk)
             t = median_time_s(fn, q, k, v, iters=iters)
+            _record_timed(
+                "flash", t, algo="dot", dtype=dtype,
+                flops=4.0 * bh * sq * sk * d * (0.5 if sq == sk else 1.0))
         except Exception as e:                      # noqa: BLE001
             counters["failed_candidates"] += 1
             trace.append({"blocks": [bq, bk], "error": str(e)[:200]})

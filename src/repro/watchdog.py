@@ -21,12 +21,23 @@ Semantics (unchanged from the original train-only watchdog):
 
 The clock is injectable (any zero-arg callable returning seconds) so the
 timeout logic is unit-testable without sleeping.
+
+Telemetry: straggler flags and dead-man trips are emitted as ``repro.obs``
+counters (``watchdog_straggler_flags_total`` / ``watchdog_deadman_trips_total``
+labeled by ``loop``) FROM THIS MODULE ONLY — the ``train.watchdog`` shim is
+a pure alias carrying no state of its own, so the two consumers can never
+double-count (the regression test in test_obs.py pins this). The local
+``events`` list is a bounded ring (the old unbounded list leaked on
+long-running servers).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Optional
+
+_EVENT_RING = 256
 
 
 @dataclasses.dataclass
@@ -45,14 +56,26 @@ class Watchdog:
     def __init__(self, cfg: WatchdogConfig = WatchdogConfig(),
                  on_straggler: Optional[Callable[[int, float, float],
                                                  None]] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 registry=None, loop: str = "serve"):
         self.cfg = cfg
         self.clock = clock
         self.ema: Optional[float] = None
         self.flags = 0
-        self.events: List[dict] = []
+        self.events: "collections.deque[dict]" = collections.deque(
+            maxlen=_EVENT_RING)
         self.on_straggler = on_straggler
         self._last_tick = clock()
+        if registry is None:
+            from repro.obs import get_registry
+            registry = get_registry()
+        self._m_stragglers = registry.counter(
+            "watchdog_straggler_flags_total",
+            "ticks exceeding threshold x EMA", ("loop",)).labels(loop=loop)
+        self._m_deadman = registry.counter(
+            "watchdog_deadman_trips_total",
+            "dead-man timer expiries (HangError raised)",
+            ("loop",)).labels(loop=loop)
 
     def observe(self, step: int, dt: float) -> bool:
         """Feed one step duration; returns True if mitigation fired."""
@@ -64,6 +87,7 @@ class Watchdog:
             if dt > self.cfg.threshold * self.ema:
                 self.flags += 1
                 self.events.append(dict(step=step, dt=dt, ema=self.ema))
+                self._m_stragglers.inc()
                 if self.flags >= self.cfg.consecutive_to_act:
                     fired = True
                     self.flags = 0
@@ -79,6 +103,7 @@ class Watchdog:
 
     def check_hang(self) -> None:
         if self.clock() - self._last_tick > self.cfg.hang_timeout_s:
+            self._m_deadman.inc()
             raise HangError(
                 f"no step for >{self.cfg.hang_timeout_s}s — restore the "
                 "latest checkpoint / fail work over to a healthy replica "

@@ -14,8 +14,14 @@ in ``results*`` — ``e2e_ms`` per contiguous/paged row and ``e2e_fake_s`` in
 (``serve_request_e2e_seconds`` / ``router_request_e2e_seconds``, each run on
 its own fresh ``obs.Registry``), cross-checked in-process against the raw
 per-request records (exact-reservoir quantiles, so the numbers are
-bit-comparable with the pre-obs percentile math). Numbers measured before
-earlier refactors stay verbatim under ``baseline_pr2`` / ``baseline_prev``.
+bit-comparable with the pre-obs percentile math). ``ttft_ms`` p50/p99 and
+``itl_ms`` come from the WINDOWED histograms
+(``serve_ttft_window_seconds`` / ``serve_itl_window_seconds``, window pinned
+to 3600 s so the whole timed run stays live), likewise cross-checked against
+the raw per-request lists with a zero-``samples_dropped`` assertion — the
+bench is the proof the SLO-facing windowed percentiles are exact. Numbers
+measured before earlier refactors stay verbatim under ``baseline_pr2`` /
+``baseline_prev``.
 
 ``results_faults`` drives the multi-replica router with 1-of-3 replicas
 flapping on a seeded FaultPlan (raise/hang, fake clock) and records outcome
@@ -153,6 +159,9 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
     cfg = configs.smoke_config(configs.get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # obs_window_s=3600: the windowed TTFT/ITL histograms must cover the
+    # whole timed run so nothing expires mid-bench and the windowed
+    # percentiles are exact over every steady-state request.
     srv = BatchServer(model, batch_slots=slots, max_len=max_len,
                       quantized=quantized, decode_chunk=decode_chunk,
                       gemm_impl=gemm_impl, gemm_block=gemm_block,
@@ -160,7 +169,7 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
                       prefill_chunk=prefill_chunk,
                       paged_attention=paged_attention,
                       mesh=mesh, prepared=prepared,
-                      registry=obs.Registry())
+                      registry=obs.Registry(), obs_window_s=3600.0)
 
     def _workload(budget, s):
         if mix_long_len:
@@ -208,10 +217,26 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
     # can never silently skew the bench numbers.
     e2e_hist = srv.registry.get("serve_request_e2e_seconds").labels(
         replica=srv.obs_labels.get("replica", "solo"))
+    assert not e2e_hist.overflowed, \
+        "e2e reservoir overflowed: percentiles would be partial, not exact"
     e2e = np.array(sorted(r.t_done - r.t_submit for r in done))
     for q, pct in ((0.50, 50), (0.99, 99)):
         assert abs(e2e_hist.quantile(q) - float(np.percentile(e2e, pct))) \
             < 1e-9, "obs e2e histogram diverges from request records"
+    # TTFT / inter-token-latency percentiles from the WINDOWED histograms
+    # (the same instruments an SLO burns against), cross-checked against the
+    # raw per-request lists; the 3600 s window covers the whole timed run.
+    w_ttft = srv.registry.get("serve_ttft_window_seconds")
+    w_itl = srv.registry.get("serve_itl_window_seconds")
+    itl = sorted(v for r in done for v in (r.itl_s or ()))
+    for wh, raw in ((w_ttft, sorted(ttft)), (w_itl, itl)):
+        assert wh.samples_dropped() == 0, \
+            f"{wh.name}: windowed reservoir overflowed during the bench"
+        assert wh.count() == len(raw), \
+            f"{wh.name}: windowed count {wh.count()} != {len(raw)} raw"
+        for q, pct in ((0.50, 50), (0.99, 99)):
+            assert abs(wh.quantile(q) - float(np.percentile(raw, pct))) \
+                < 1e-9, f"{wh.name} diverges from raw request records"
     st = srv.stats
     steps = st["steps"]
     out = {
@@ -240,9 +265,16 @@ def bench(arch: str, *, slots: int, requests: int, max_new: int,
         "prefill_dispatches": st["prefill_dispatches"],
         "decode_tokens": st["decode_tokens"],
         "decode_ms_per_step": round(1e3 * st["decode_s"] / max(steps, 1), 2),
-        # queue wait + prefill until the first token, per request
+        # queue wait + prefill until the first token, per request; p50/p99
+        # sourced from the windowed histogram serve_ttft_window_seconds
         "ttft_ms": {"mean": round(1e3 * sum(ttft) / len(ttft), 2),
-                    "max": round(1e3 * max(ttft), 2)},
+                    "max": round(1e3 * max(ttft), 2),
+                    "p50": round(1e3 * w_ttft.quantile(0.50), 2),
+                    "p99": round(1e3 * w_ttft.quantile(0.99), 2)},
+        # per emitted token, from serve_itl_window_seconds (fused decode
+        # chunks amortize: each of the k tokens is charged dispatch_dt / k)
+        "itl_ms": {"p50": round(1e3 * w_itl.quantile(0.50), 2),
+                   "p99": round(1e3 * w_itl.quantile(0.99), 2)},
         # submit -> last token, per request (queue wait included); sourced
         # from the obs histogram serve_request_e2e_seconds
         "e2e_ms": {"p50": round(1e3 * e2e_hist.quantile(0.50), 2),
@@ -593,6 +625,8 @@ def main():
         print(f"serve_bench.{r['arch']}.{r['mode']}.chunk{r['decode_chunk']},"
               f"{r['tok_per_s']} tok/s,{r['steps_per_s']} steps/s,"
               f"decode={r['phase_s']['decode']}s,"
+              f"ttft_p99={r['ttft_ms']['p99']}ms,"
+              f"itl_p99={r['itl_ms']['p99']}ms,"
               f"compile={r['compile_s']}s,"
               f"host_B/step={r['host_bytes_per_step']}")
     for r in results_paged:

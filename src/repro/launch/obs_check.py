@@ -17,7 +17,14 @@ Checks (each failure is listed; exit 1 if any):
     telemetry, not just survived);
   * the trace parses and every rid 0..R-1 reconstructs to ONE complete span
     tree: a single ``request`` root, ended (t1 set), with at least one child
-    phase span.
+    phase span;
+  * with ``--expect-slo NAME``: the SLO loop closed — ``slo_state{slo=NAME}``
+    exists, at least ``--min-alerts`` transitions fired
+    (``slo_transitions_total``), the trace carries ``slo_alert`` and
+    ``controller`` point events, and every action listed in
+    ``--expect-controller`` was counted in ``router_controller_total``;
+    ``--expect-recovery`` additionally requires the final state back at
+    OK/healthy (burn recovered, controller walked back down the ladder).
 """
 from __future__ import annotations
 
@@ -70,6 +77,48 @@ def check_metrics(payload: dict, *, replicas: int, requests: int,
     return problems
 
 
+def check_slo(payload: dict, trace_path: str, *, slos: List[str],
+              min_alerts: int, controller_actions: List[str],
+              expect_recovery: bool) -> List[str]:
+    """The closed-loop gate: breach -> alert -> controller action (->
+    recovery) must all be VISIBLE in the metrics snapshot and the trace."""
+    problems: List[str] = []
+    metrics = payload.get("metrics", payload)
+    for name in slos:
+        if not any(s["labels"].get("slo") == name
+                   for s in metrics.get("slo_state", {}).get("series", [])):
+            problems.append(f"slo {name}: no slo_state series recorded")
+            continue
+        fired = _series_value(metrics, "slo_transitions_total", slo=name)
+        if fired < min_alerts:
+            problems.append(f"slo {name}: {fired:.0f} alert transitions < "
+                            f"--min-alerts {min_alerts}")
+        if expect_recovery:
+            final = _series_value(metrics, "slo_state", slo=name)
+            if final != 0:
+                problems.append(f"slo {name}: final state {final:.0f} != OK "
+                                f"(burn never recovered)")
+    for action in controller_actions:
+        if _series_value(metrics, "router_controller_total",
+                         action=action) <= 0:
+            problems.append(f"controller action {action!r} never counted in "
+                            f"router_controller_total")
+    if expect_recovery and controller_actions:
+        if _series_value(metrics, "router_controller_state") != 0:
+            problems.append("router_controller_state != healthy at exit")
+    if trace_path.endswith(".jsonl"):
+        try:
+            spans = load_jsonl(trace_path)
+        except Exception as e:                          # noqa: BLE001
+            return problems + [f"trace unreadable for slo events: {e}"]
+        names = {s.name for s in spans}
+        if slos and "slo_alert" not in names:
+            problems.append("no slo_alert events in the trace")
+        if controller_actions and "controller" not in names:
+            problems.append("no controller events in the trace")
+    return problems
+
+
 def check_trace(path: str, *, requests: int) -> List[str]:
     problems: List[str] = []
     if not path.endswith(".jsonl"):
@@ -119,6 +168,20 @@ def main(argv=None) -> int:
     ap.add_argument("--allow-failures", action="store_true",
                     help="don't require completed == requests (deadline "
                          "runs legitimately time requests out)")
+    ap.add_argument("--expect-slo", action="append", default=[],
+                    metavar="NAME",
+                    help="require the SLO loop closed for this objective "
+                         "(repeatable): slo_state series + alert "
+                         "transitions + slo_alert trace events")
+    ap.add_argument("--min-alerts", type=int, default=1,
+                    help="min alert transitions per --expect-slo objective")
+    ap.add_argument("--expect-controller", default=None, metavar="A,B,...",
+                    help="comma list of degradation-controller actions that "
+                         "must appear in router_controller_total "
+                         "(e.g. tighten,probe,recover)")
+    ap.add_argument("--expect-recovery", action="store_true",
+                    help="require final slo_state == OK and the controller "
+                         "back at healthy (the full closed loop)")
     args = ap.parse_args(argv)
 
     with open(args.metrics_json) as f:
@@ -128,11 +191,22 @@ def main(argv=None) -> int:
                              min_retries=args.min_retries,
                              allow_failures=args.allow_failures)
     problems += check_trace(args.trace, requests=args.requests)
+    actions = ([a for a in args.expect_controller.split(",") if a]
+               if args.expect_controller else [])
+    if args.expect_slo or actions:
+        problems += check_slo(payload, args.trace, slos=args.expect_slo,
+                              min_alerts=args.min_alerts,
+                              controller_actions=actions,
+                              expect_recovery=args.expect_recovery)
     if problems:
         print("obs-check FAIL:\n  " + "\n  ".join(problems), file=sys.stderr)
         return 1
+    extras = ""
+    if args.expect_slo:
+        extras = (f", slo loop closed for {args.expect_slo}"
+                  + (" with recovery" if args.expect_recovery else ""))
     print(f"obs-check OK: {args.replicas} replicas active, "
-          f"{args.requests} span trees complete")
+          f"{args.requests} span trees complete{extras}")
     return 0
 
 

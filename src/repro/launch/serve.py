@@ -129,6 +129,13 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
     tiers = [i >= args.replicas - nq for i in range(args.replicas)]
     clock = FakeClock() if plan is not None else None
 
+    objectives = None
+    if args.slo:
+        fast_s, slow_s = (float(x) for x in args.slo_windows.split(","))
+        objectives = [obs.Objective.parse(
+            spec, fast_window_s=fast_s, slow_window_s=slow_s,
+            min_count=args.slo_min_count) for spec in args.slo]
+
     def mk(q):
         # clock threading: under a fault plan every replica reads the SAME
         # fake clock as the router, so spans/latency histograms line up with
@@ -147,7 +154,7 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
     rt = ReplicaRouter(servers, params, fault_plan=plan, clock=clock,
                        cfg=RouterConfig(
                            step_timeout_s=5.0, quarantine_s=0.2,
-                           max_retries=4,
+                           max_retries=4, objectives=objectives,
                            default_deadline_s=(args.deadline_ms / 1000.0
                                                if args.deadline_ms else
                                                None)))
@@ -159,6 +166,10 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
         recs = rt.drive(max_ticks=50_000)
     except ServeStallError as e:
         raise SystemExit(f"FAIL: {e}")
+    # extra idle ticks so the burn windows can expire and the degradation
+    # controller can walk back to healthy (the obs_check recovery gate)
+    for _ in range(args.slo_drain_ticks):
+        rt.step()
     dt = time.perf_counter() - t0
 
     # no-fault single-server oracle per tier that actually served work
@@ -187,6 +198,12 @@ def _serve_router(model, params, prompts, args, *, mesh=None, prepared=None):
         print(f"  e2e latency ({unit}): p50={np.percentile(lat, 50):.4f} "
               f"p99={np.percentile(lat, 99):.4f}")
     print(f"  router: {rt.stats}")
+    if rt.slo is not None:
+        states = {k: v.name for k, v in rt.slo.states().items()}
+        ctl = {key[0]: int(c.value) for key, c in
+               rt.registry.get("router_controller_total")._children.items()}
+        print(f"  slo: states={states} controller={rt.ctl_state} "
+              f"actions={ctl}")
 
     problems = []
     if any(not rec.terminal for rec in recs.values()):
@@ -277,6 +294,18 @@ def main():
                     help="deterministic chaos schedule for the router path "
                          "(inline JSON, @path, or 'flaky'); runs on a fake "
                          "clock")
+    ap.add_argument("--slo", action="append", default=None, metavar="SPEC",
+                    help="SLO objective for the router path, repeatable — "
+                         "'ttft_ms p99 < 2000' or 'error_rate < 0.25'; "
+                         "enables the burn-rate degradation controller")
+    ap.add_argument("--slo-windows", default="5,30", metavar="FAST,SLOW",
+                    help="burn-rate window lengths in (fake) seconds "
+                         "(default 5,30)")
+    ap.add_argument("--slo-min-count", type=int, default=3,
+                    help="min samples per window before an SLO can PAGE")
+    ap.add_argument("--slo-drain-ticks", type=int, default=0, metavar="N",
+                    help="idle router ticks after the workload drains, so "
+                         "burn windows expire and the controller recovers")
     ap.add_argument("--prepared", default=None, metavar="DIR",
                     help="serve from a repro.prepare artifact "
                          "(python -m repro.launch.prepare)")
@@ -300,6 +329,9 @@ def main():
                     help="serve live Prometheus text on 127.0.0.1:N/metrics "
                          "for the duration of the run (0 = ephemeral port)")
     args = ap.parse_args()
+    if args.slo and not args.replicas:
+        raise SystemExit("--slo requires --replicas (the burn-rate "
+                         "degradation controller lives in the router)")
     args.gemm_block_parsed = args.gemm_block
     if args.gemm_block and args.gemm_block != "auto":
         args.gemm_block_parsed = tuple(

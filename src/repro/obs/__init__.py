@@ -22,10 +22,13 @@ from typing import Callable
 
 from repro.obs.metrics import (                                 # noqa: F401
     CardinalityError, Counter, Gauge, Histogram, Registry,
-    get_registry, parse_prometheus, set_registry, start_metrics_server)
+    get_registry, parse_help, parse_prometheus, set_registry,
+    start_metrics_server)
 from repro.obs.trace import Span, Tracer, load_jsonl, tree_from_spans  # noqa: F401
 from repro.obs.profile import (                                 # noqa: F401
     KernelProfiler, compile_snapshot, get_profiler, set_profiler)
+from repro.obs.window import WindowedCounter, WindowedHistogram  # noqa: F401
+from repro.obs.slo import AlertState, Objective, SloMonitor, SloTracker  # noqa: F401
 
 _clock: Callable[[], float] = time.perf_counter
 

@@ -118,6 +118,15 @@ class Metric:
             return [((), self)]
         return sorted(self._children.items())
 
+    # -- export protocol (one series = one bound child) ---------------------
+    def _snap(self, labels: Dict[str, str]) -> dict:
+        """One json-safe snapshot entry for this series."""
+        return {"labels": labels, "value": self.value}
+
+    def _prom(self, name: str, lab: Dict[str, str]) -> List[str]:
+        """Exposition lines for this series."""
+        return [f"{name}{_fmt_labels(lab)} {_fmt(self.value)}"]
+
 
 class Counter(Metric):
     kind = "counter"
@@ -189,6 +198,7 @@ class Histogram(Metric):
         self.counts: List[int] = [0] * (len(bs) + 1)   # per-bucket, not cum.
         self.sum = 0.0
         self.count = 0
+        self.samples_dropped = 0      # observations past the reservoir cap
         self._samples: List[float] = []
 
     def _new_child(self) -> "Histogram":
@@ -208,6 +218,14 @@ class Histogram(Metric):
         self.count += 1
         if len(self._samples) < self.reservoir:
             self._samples.append(v)
+        else:
+            self.samples_dropped += 1
+
+    @property
+    def overflowed(self) -> bool:
+        """True once the reservoir stopped retaining raw samples — from then
+        on :meth:`quantile` is bucket-interpolated, not exact."""
+        return self.samples_dropped > 0
 
     def quantile(self, q: float) -> float:
         """q in [0, 1]. Exact (numpy 'linear') while the reservoir holds
@@ -235,6 +253,34 @@ class Histogram(Metric):
             seen += c
             lo_bound = hi_bound
         return self.buckets[-1]
+
+    def _snap(self, labels: Dict[str, str]) -> dict:
+        cum, running = [], 0
+        for c in self.counts:
+            running += c
+            cum.append(running)
+        return {
+            "labels": labels, "sum": self.sum, "count": self.count,
+            "samples_dropped": self.samples_dropped,
+            "overflowed": self.overflowed,
+            "buckets": [
+                {"le": (self.buckets[i] if i < len(self.buckets)
+                        else "+Inf"), "count": cum[i]}
+                for i in range(len(self.counts))],
+        }
+
+    def _prom(self, name: str, lab: Dict[str, str]) -> List[str]:
+        lines, running = [], 0
+        for i, c in enumerate(self.counts):
+            running += c
+            le = _fmt(self.buckets[i]) if i < len(self.buckets) else "+Inf"
+            lines.append(f"{name}_bucket{_fmt_labels({**lab, 'le': le})} "
+                         f"{running}")
+        lines.append(f"{name}_sum{_fmt_labels(lab)} {_fmt(self.sum)}")
+        lines.append(f"{name}_count{_fmt_labels(lab)} {self.count}")
+        lines.append(f"{name}_samples_dropped{_fmt_labels(lab)} "
+                     f"{self.samples_dropped}")
+        return lines
 
 
 class Registry:
@@ -275,34 +321,38 @@ class Registry:
         return self._register(Histogram, name, help, labels,
                               buckets=buckets, reservoir=reservoir)
 
+    def windowed_histogram(self, name: str, help: str = "",
+                           labels: Sequence[str] = (), *,
+                           window_s: float = 30.0, sub_buckets: int = 30,
+                           reservoir_per_bucket: int = 256, clock=None):
+        from repro.obs.window import WindowedHistogram
+        return self._register(WindowedHistogram, name, help, labels,
+                              window_s=window_s, sub_buckets=sub_buckets,
+                              reservoir_per_bucket=reservoir_per_bucket,
+                              clock=clock)
+
+    def windowed_counter(self, name: str, help: str = "",
+                         labels: Sequence[str] = (), *,
+                         window_s: float = 30.0, sub_buckets: int = 30,
+                         clock=None):
+        from repro.obs.window import WindowedCounter
+        return self._register(WindowedCounter, name, help, labels,
+                              window_s=window_s, sub_buckets=sub_buckets,
+                              clock=clock)
+
     def get(self, name: str) -> Optional[Metric]:
         return self._metrics.get(name)
 
     # -- export -------------------------------------------------------------
     def snapshot(self) -> dict:
         """Plain json-safe dict, deterministically ordered: metric name ->
-        {kind, help, series: [{labels, value | (sum, count, buckets)}]}."""
+        {kind, help, series: [...]} — each series shape is owned by the
+        metric type (``Metric._snap``)."""
         out: Dict[str, dict] = {}
         for name in sorted(self._metrics):
             m = self._metrics[name]
-            series = []
-            for key, child in m._series():
-                labels = dict(zip(m.label_names, key))
-                if isinstance(child, Histogram):
-                    cum, running = [], 0
-                    for c in child.counts:
-                        running += c
-                        cum.append(running)
-                    series.append({
-                        "labels": labels, "sum": child.sum,
-                        "count": child.count,
-                        "buckets": [
-                            {"le": (child.buckets[i] if i < len(child.buckets)
-                                    else "+Inf"), "count": cum[i]}
-                            for i in range(len(child.counts))],
-                    })
-                else:
-                    series.append({"labels": labels, "value": child.value})
+            series = [child._snap(dict(zip(m.label_names, key)))
+                      for key, child in m._series()]
             out[name] = {"kind": m.kind, "help": m.help, "series": series}
         return out
 
@@ -312,26 +362,13 @@ class Registry:
         for name in sorted(self._metrics):
             m = self._metrics[name]
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
-            lines.append(f"# TYPE {name} {m.kind}")
+                lines.append(f"# HELP {name} {_escape_help(m.help)}")
+            # windowed kinds map onto the nearest standard exposition type
+            ptype = {"windowed_histogram": "summary",
+                     "windowed_counter": "gauge"}.get(m.kind, m.kind)
+            lines.append(f"# TYPE {name} {ptype}")
             for key, child in m._series():
-                lab = dict(zip(m.label_names, key))
-                if isinstance(child, Histogram):
-                    running = 0
-                    for i, c in enumerate(child.counts):
-                        running += c
-                        le = (_fmt(child.buckets[i])
-                              if i < len(child.buckets) else "+Inf")
-                        lines.append(
-                            f"{name}_bucket{_fmt_labels({**lab, 'le': le})} "
-                            f"{running}")
-                    lines.append(f"{name}_sum{_fmt_labels(lab)} "
-                                 f"{_fmt(child.sum)}")
-                    lines.append(f"{name}_count{_fmt_labels(lab)} "
-                                 f"{child.count}")
-                else:
-                    lines.append(f"{name}{_fmt_labels(lab)} "
-                                 f"{_fmt(child.value)}")
+                lines.extend(child._prom(name, dict(zip(m.label_names, key))))
         return "\n".join(lines) + "\n"
 
     def to_json(self) -> str:
@@ -355,10 +392,49 @@ def _escape(s: str) -> str:
     return s.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
 
 
+def _escape_help(s: str) -> str:
+    """HELP text escaping per the exposition spec: only backslash and
+    newline (quotes stay literal). Unescaped, an embedded newline splits
+    the HELP line and the remainder parses as a garbage sample."""
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _unescape_help(s: str) -> str:
+    out, i = [], 0
+    while i < len(s):
+        if s[i] == "\\" and i + 1 < len(s):
+            nxt = s[i + 1]
+            if nxt == "n":
+                out.append("\n")
+                i += 2
+                continue
+            if nxt == "\\":
+                out.append("\\")
+                i += 2
+                continue
+        out.append(s[i])
+        i += 1
+    return "".join(out)
+
+
+def parse_help(text: str) -> Dict[str, str]:
+    """Extract ``# HELP`` lines back into {name: unescaped help} — the other
+    half of the HELP round-trip."""
+    out: Dict[str, str] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if line.startswith("# HELP "):
+            rest = line[len("# HELP "):]
+            name, _, help_text = rest.partition(" ")
+            out[name] = _unescape_help(help_text)
+    return out
+
+
 def parse_prometheus(text: str) -> Dict[str, Dict[Tuple[Tuple[str, str], ...],
                                                   float]]:
     """Parse exposition text back into {name: {labels-tuple: value}} — the
-    round-trip half used by tests and the scrape smoke. Ignores comments."""
+    round-trip half used by tests and the scrape smoke. Ignores comments
+    (see :func:`parse_help` for the HELP side of the round-trip)."""
     out: Dict[str, Dict[Tuple[Tuple[str, str], ...], float]] = {}
     for line in text.splitlines():
         line = line.strip()

@@ -85,6 +85,10 @@ class Request:
     t_submit: float = 0.0         # set by submit()
     t_first: float = 0.0          # set when the first token lands (TTFT)
     t_done: float = 0.0           # set when the request completes (e2e)
+    # per-token inter-token latency (seconds): one entry per decoded token
+    # after the first, mirroring what lands in serve_itl_window_seconds —
+    # the raw list serve_bench cross-checks the windowed percentiles against
+    itl_s: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
@@ -157,7 +161,7 @@ class BatchServer:
                  prefix_sharing: bool = True, mesh=None,
                  moe_partition: str = "expert", prepared=None,
                  clock=None, registry=None, tracer=None,
-                 trace_capacity: int = 4096):
+                 trace_capacity: int = 4096, obs_window_s: float = 30.0):
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
         if decode_chunk < 1:
@@ -183,6 +187,8 @@ class BatchServer:
         self.decode_chunk = decode_chunk
         self.paged = paged
         self.quantized = quantized   # the router's tier tag (shed policy)
+        self.tier = "int8" if quantized else "float"
+        self.obs_window_s = obs_window_s  # sliding-window span for TTFT/ITL
         # dist x serve: `mesh` turns on tensor-parallel decode. Params and
         # cache are placed through the repro.dist rule engine (column/row-
         # parallel projections + KV-head sharding on the "model" axis,
@@ -384,6 +390,21 @@ class BatchServer:
         self._m_cow = r.counter(
             "serve_cow_copies_total", "copy-on-write page copies",
             ("replica",)).labels(replica=rep)
+        # sliding-window phase attribution (the SLO-facing latencies):
+        # TTFT and per-token inter-token latency over the last
+        # `obs_window_s` seconds, labeled by replica AND tier so a mixed
+        # float/int8 fleet reads per-tier percentiles off one family
+        wlab = ("replica", "tier")
+        self._w_ttft = r.windowed_histogram(
+            "serve_ttft_window_seconds",
+            "submit -> first token, sliding window", wlab,
+            window_s=self.obs_window_s, clock=self._clock
+        ).labels(replica=rep, tier=self.tier)
+        self._w_itl = r.windowed_histogram(
+            "serve_itl_window_seconds",
+            "per-token inter-token latency, sliding window", wlab,
+            window_s=self.obs_window_s, clock=self._clock
+        ).labels(replica=rep, tier=self.tier)
 
     @property
     def events(self) -> List[Tuple]:
@@ -570,6 +591,7 @@ class BatchServer:
             self._cached_hits.append(req)
             return
         req.out_tokens = []
+        req.itl_s = []
         if self.trace_requests and req.rid not in self._req_spans:
             self._req_spans[req.rid] = self.tracer.start(
                 "request", rid=str(req.rid), prompt=len(req.prompt),
@@ -592,6 +614,7 @@ class BatchServer:
             self._results.popitem(last=False)
         for w in self._dup_waiters.pop(req.rid, []):
             w.out_tokens = list(req.out_tokens)
+            w.itl_s = None if req.itl_s is None else list(req.itl_s)
             w.t_first = req.t_first
             w.t_done = req.t_done
             self._completed.append(w)
@@ -677,6 +700,7 @@ class BatchServer:
         """Post-prefill bookkeeping shared by all prefill paths."""
         req.out_tokens.append(first)
         req.t_first = self._clock()
+        self._w_ttft.observe(req.t_first - req.t_submit)
         slot = self.slots[slot_i]
         if req.max_new_tokens <= 1 or first == req.eos_id:
             # finished at prefill (token budget of 1, or EOS on the first
@@ -1052,6 +1076,9 @@ class BatchServer:
         self._m_host_bytes["decode"].inc(int(toks_h.nbytes))
         # replay the device's (eos, remaining) bookkeeping on the host to
         # recover which of the chunk tokens were actually emitted per slot.
+        # Inter-token attribution: a fused chunk of k steps lands host-side
+        # as one dispatch, so each token in it is charged dt / k.
+        step_dt = dt / toks_h.shape[0]
         for j in range(toks_h.shape[0]):
             emitted = 0
             for i in active:
@@ -1060,6 +1087,9 @@ class BatchServer:
                     continue
                 nxt = int(toks_h[j, i])
                 slot.req.out_tokens.append(nxt)
+                self._w_itl.observe(step_dt)
+                if slot.req.itl_s is not None:
+                    slot.req.itl_s.append(step_dt)
                 slot.pos += 1
                 slot.remaining -= 1
                 emitted += 1

@@ -52,6 +52,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 import repro.obs as obs
+from repro.obs.slo import AlertState, Objective, SloMonitor
 from repro.obs.trace import Tracer
 from repro.serve import lifecycle as lc
 from repro.serve.batcher import BatchServer, Request
@@ -59,6 +60,15 @@ from repro.serve.faults import FaultPlan, FaultSpec, InjectedFault
 from repro.watchdog import Watchdog, WatchdogConfig
 
 HEALTHY, PROBING, QUARANTINED = "healthy", "probing", "quarantined"
+
+# degradation-controller states (distinct from per-replica health above):
+# healthy -> degraded (WARN: shed to int8) -> tightened (PAGE: shed +
+# shrunken admission) -> probing (burn cleared, on probation) -> healthy
+CTL_HEALTHY, CTL_PROBING = "healthy", "probing"
+CTL_DEGRADED, CTL_TIGHTENED = "degraded", "tightened"
+_CTL_LEVEL = {CTL_HEALTHY: 0, CTL_PROBING: 1,
+              CTL_DEGRADED: 2, CTL_TIGHTENED: 3}
+_REPLICA_LEVEL = {HEALTHY: 0, PROBING: 1, QUARANTINED: 2}
 
 
 @dataclasses.dataclass
@@ -77,6 +87,12 @@ class RouterConfig:
     quarantine_s: float = 1.0       # doubles per consecutive quarantine
     shed_queue_depth: int = 4       # queue depth counting as "pressure"
     tick_s: float = 0.01            # fake-clock advance per drive tick
+    # -- SLO-driven degradation controller (None == controller off; the
+    # shed_queue_depth comparison above is then the only pressure signal,
+    # and stays in force as a FLOOR when the controller is on) ------------
+    objectives: Optional[Sequence[Objective]] = None
+    tighten_factor: int = 4         # PAGE: max_queue // this admission bound
+    probe_s: float = 0.5            # probation after the burn clears
 
 
 class _Replica:
@@ -152,6 +168,34 @@ class ReplicaRouter:
             s.tracer = self.tracer
             s.trace_requests = False     # router owns the root request span
             s.set_obs_labels({"replica": str(i)})
+        # -- SLO degradation controller -------------------------------------
+        self.slo: Optional[SloMonitor] = None
+        if self.cfg.objectives:
+            self.slo = SloMonitor(list(self.cfg.objectives),
+                                  registry=self.registry,
+                                  tracer=self.tracer, clock=self._now)
+        self.ctl_state = CTL_HEALTHY
+        self._probe_until = 0.0
+        win = max((o.slow_window_s for o in (self.cfg.objectives or ())),
+                  default=30.0)
+        self._w_ttft = self.registry.windowed_histogram(
+            "router_ttft_ms_window",
+            "router-level TTFT (ms; includes queueing and retries)",
+            ("replica", "tier"), window_s=win, clock=self._now)
+        self._m_ctl = self.registry.counter(
+            "router_controller_total", "degradation-controller decisions",
+            ("action",))
+        self._g_ctl = self.registry.gauge(
+            "router_controller_state",
+            "0=healthy 1=probing 2=degraded 3=tightened")
+        self._g_admit = self.registry.gauge(
+            "router_admission_limit", "effective router queue bound")
+        self._g_admit.set(self.admission_limit())
+        self._g_replica = self.registry.gauge(
+            "router_replica_state", "0=healthy 1=probing 2=quarantined",
+            ("replica",))
+        for r in self.replicas:
+            self._g_replica.labels(replica=str(r.idx)).set(0)
         self.dog = Watchdog(
             watchdog_cfg or WatchdogConfig(), clock=self._now,
             registry=self.registry, loop="serve",
@@ -236,10 +280,14 @@ class ReplicaRouter:
                 f"exceeds every replica's cache/pool)")
         depth = sum(1 for rid in self._rq
                     if not self.records[rid].terminal)
-        if depth >= self.cfg.max_queue:
+        limit = self.admission_limit()
+        if depth >= limit:
             self._bump("rejected")
+            tightened = "" if limit == self.cfg.max_queue else \
+                f", tightened from {self.cfg.max_queue} by the " \
+                f"degradation controller"
             raise lc.RejectedError(
-                f"router queue full ({depth}/{self.cfg.max_queue})",
+                f"router queue full ({depth}/{limit}{tightened})",
                 retry_after_s=self.cfg.backoff_base_s * (1 + depth))
         d = deadline_s if deadline_s is not None \
             else self.cfg.default_deadline_s
@@ -272,6 +320,7 @@ class ReplicaRouter:
         t0 = self._now()
         self._expire(t0)
         self._revive(t0)
+        self._controller_tick(t0)
         self._dispatch(t0)
         for r in self.replicas:
             if r.state == QUARANTINED or not r.outstanding:
@@ -323,6 +372,8 @@ class ReplicaRouter:
             rec.error = lc.DeadlineExceededError(why, phase=rec.state.value)
             rec.transition(lc.Lifecycle.TIMED_OUT, now)
             self._bump("timed_out")
+            if self.slo is not None:
+                self.slo.observe_event("error_rate", False)
             self.events.append(("timed_out", rec.req.rid, rec.state.value))
 
     # -- health ------------------------------------------------------------
@@ -368,6 +419,8 @@ class ReplicaRouter:
                 attempts=rec.attempts + 1, cause=err)
             rec.transition(lc.Lifecycle.FAILED, now)
             self._bump("failed")
+            if self.slo is not None:
+                self.slo.observe_event("error_rate", False)
             return
         rec.attempts += 1
         self._bump("retries")
@@ -382,9 +435,57 @@ class ReplicaRouter:
         self.events.append(("retry", rec.req.rid, rec.attempts,
                             type(err).__name__))
 
+    # -- SLO degradation controller ----------------------------------------
+    def admission_limit(self) -> int:
+        """The effective queue bound: ``max_queue`` normally, shrunk by
+        ``tighten_factor`` while the controller is TIGHTENED (PAGE-level
+        burn). Never below 1."""
+        if self.ctl_state == CTL_TIGHTENED:
+            return max(1, self.cfg.max_queue // self.cfg.tighten_factor)
+        return self.cfg.max_queue
+
+    def _ctl_move(self, to: str, action: str, alert: AlertState,
+                  now: float) -> None:
+        frm, self.ctl_state = self.ctl_state, to
+        self._m_ctl.labels(action=action).inc()
+        self._g_ctl.set(_CTL_LEVEL[to])
+        self._g_admit.set(self.admission_limit())
+        self.events.append(("controller", action, frm, to))
+        self.tracer.event("controller", action=action, frm=frm, to=to,
+                          alert=alert.name)
+
+    def _controller_tick(self, now: float) -> None:
+        """Evaluate the SLOs and advance the degradation ladder. Escalation
+        is immediate; the way back down runs through the SLO trackers'
+        ``clear_s`` hysteresis plus a ``probe_s`` probation window, so one
+        good tick never flaps the fleet back to full admission."""
+        for r in self.replicas:
+            self._g_replica.labels(replica=str(r.idx)).set(
+                _REPLICA_LEVEL[r.state])
+        if self.slo is None:
+            return
+        alert = self.slo.evaluate(now)
+        st = self.ctl_state
+        if alert == AlertState.PAGE:
+            if st != CTL_TIGHTENED:
+                self._ctl_move(CTL_TIGHTENED, "tighten", alert, now)
+        elif alert == AlertState.WARN:
+            if st == CTL_TIGHTENED:
+                self._ctl_move(CTL_DEGRADED, "relax", alert, now)
+            elif st != CTL_DEGRADED:
+                self._ctl_move(CTL_DEGRADED, "degrade", alert, now)
+        else:  # AlertState.OK
+            if st in (CTL_DEGRADED, CTL_TIGHTENED):
+                self._probe_until = now + self.cfg.probe_s
+                self._ctl_move(CTL_PROBING, "probe", alert, now)
+            elif st == CTL_PROBING and now >= self._probe_until:
+                self._ctl_move(CTL_HEALTHY, "recover", alert, now)
+
     # -- dispatch ----------------------------------------------------------
     def _dispatch(self, now: float):
-        pressure = len(self._rq) >= self.cfg.shed_queue_depth
+        # burn-driven shed, with the static queue-depth knob as a floor
+        pressure = (len(self._rq) >= self.cfg.shed_queue_depth
+                    or self.ctl_state in (CTL_DEGRADED, CTL_TIGHTENED))
         held: List[int] = []
         while self._rq:
             rid = self._rq.popleft()
@@ -551,6 +652,18 @@ class ReplicaRouter:
         rec.t_done = now
         rec.transition(lc.Lifecycle.DONE, now)
         self._bump("completed")
+        # router-level TTFT: router submit -> first token on the (shared)
+        # replica clock, so queueing, backoff, and retries all count
+        if creq.t_first is not None:
+            ttft_ms = (creq.t_first - rec.t_submit) * 1e3
+            self._w_ttft.labels(replica=str(r.idx),
+                                tier=r.tier).observe(ttft_ms)
+            if self.slo is not None:
+                self.slo.observe_latency("ttft_ms", ttft_ms)
+        if self.slo is not None:
+            for v in creq.itl_s or ():
+                self.slo.observe_latency("itl_ms", v * 1e3)
+            self.slo.observe_event("error_rate", True)
         if r.state == PROBING:
             r.state = HEALTHY
             r.quarantine_count = 0       # successful probe resets the cool-

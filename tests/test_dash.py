@@ -1,0 +1,72 @@
+"""launch.dash renders a registry snapshot (pure function, no HTTP): SLO
+burn bars, controller/admission state, replica health, windowed percentile
+rows, and router totals — tolerating both a bare ``/metrics.json`` snapshot
+and the launcher's ``{"metrics": ...}`` dump payload."""
+from repro.launch.dash import _bar, render
+from repro.obs import Registry
+from repro.serve.faults import FakeClock
+
+
+def _snapshot():
+    """A miniature fleet snapshot produced by the real Registry."""
+    clock = FakeClock()
+    r = Registry()
+    r.gauge("slo_state", labels=("slo",)).labels(slo="ttft_ms").set(2)
+    b = r.gauge("slo_burn_rate", labels=("slo", "window"))
+    b.labels(slo="ttft_ms", window="fast").set(5.0)
+    b.labels(slo="ttft_ms", window="slow").set(1.2)
+    r.counter("slo_transitions_total", labels=("slo", "to")).labels(
+        slo="ttft_ms", to="PAGE").inc()
+    r.gauge("router_controller_state").set(3)
+    r.gauge("router_admission_limit").set(16)
+    r.counter("router_controller_total", labels=("action",)).labels(
+        action="tighten").inc()
+    d = r.counter("serve_dispatches_total", labels=("replica", "phase"))
+    d.labels(replica="0", phase="prefill").inc(4)
+    d.labels(replica="0", phase="decode").inc(9)
+    r.counter("serve_tokens_total", labels=("replica", "phase")).labels(
+        replica="0", phase="decode").inc(36)
+    r.gauge("router_replica_state", labels=("replica",)).labels(
+        replica="0").set(2)
+    w = r.windowed_histogram("serve_ttft_window_seconds", "t",
+                             ("replica", "tier"), window_s=30.0,
+                             clock=clock)
+    clock.t = 0.5
+    for v in (0.002, 0.004):
+        w.labels(replica="0", tier="float").observe(v)
+    ev = r.counter("router_events_total", labels=("kind",))
+    ev.labels(kind="submitted").inc(6)
+    ev.labels(kind="completed").inc(5)
+    ev.labels(kind="shed_to_quantized").inc(2)
+    r.gauge("router_queue_depth").set(1)
+    return r.snapshot()
+
+
+def test_render_all_sections():
+    out = render(_snapshot(), source="unit")
+    assert "repro.serve dashboard — unit" in out
+    assert "ttft_ms" in out and "[PAGE]" in out
+    assert "5.00" in out                       # fast burn value
+    assert "controller: tightened" in out
+    assert "admission_limit=16" in out and "tighten=1" in out
+    assert "quarantined" in out                # replica 0 state
+    assert "decode_tokens=36" in out
+    assert "p50     3.00ms" in out             # windowed ttft median
+    assert "n=2" in out
+    assert "submitted=6" in out and "shed_to_quantized=2" in out
+    assert "queue_depth=1" in out
+
+
+def test_render_tolerates_launcher_payload_and_empty_snapshot():
+    snap = _snapshot()
+    assert render({"metrics": snap, "compile": {}}) == render(snap)
+    out = render({})                           # no metrics at all: header only
+    assert out.startswith("repro.serve dashboard")
+    assert "controller" not in out
+
+
+def test_burn_bar_clamps():
+    assert _bar(0.0, 4) == "...."
+    assert _bar(0.5, 4) == "##.."
+    assert _bar(7.0, 4) == "####"              # over-unity burn stays in box
+    assert _bar(-1.0, 4) == "...."

@@ -1,0 +1,244 @@
+"""Windowed metrics (repro.obs.window) + the metrics-layer satellites that
+landed with them: sub-bucket boundary semantics under FakeClock, full-window
+expiry on a clock jump, reservoir-overflow surfacing (windowed AND the base
+Histogram), multi-window queries off one instrument, labeled-family
+aggregation, HELP-text escaping round-trip, and snapshot determinism.
+
+All timing uses binary-exact sub-bucket durations (1.0, 0.25) so epoch
+arithmetic is exact — ``1.0 // 0.1 == 9.0`` is the float trap these tests
+must not step on.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (Registry, WindowedCounter, WindowedHistogram,
+                       parse_help, parse_prometheus)
+from repro.serve.faults import FakeClock
+
+
+def _hist(clock, **kw):
+    kw.setdefault("window_s", 4.0)
+    kw.setdefault("sub_buckets", 4)          # sub_s = 1.0 (binary exact)
+    return Registry().windowed_histogram("w_s", "t", clock=clock, **kw)
+
+
+# -- ring / boundary semantics ------------------------------------------------
+
+def test_boundary_observation_starts_new_subbucket_and_expires_exactly():
+    """An observation exactly ON a sub-bucket boundary belongs to the NEW
+    sub-bucket and stays live until exactly k boundaries later."""
+    clock = FakeClock()
+    h = _hist(clock)                         # window 4.0, sub_s 1.0
+    clock.t = 1.0                            # exactly on the t=1 boundary
+    h.observe(5.0)
+    assert h.count(now=1.0) == 1
+    # live through the whole window: epochs 1..4 cover it
+    assert h.count(now=4.999) == 1
+    # at now=5.0 the query spans epochs [2, 5] — epoch 1 just fell out
+    assert h.count(now=5.0) == 0
+    assert h.quantile(0.5, now=5.0) == 0.0
+
+
+def test_partial_current_subbucket_is_included():
+    clock = FakeClock()
+    h = _hist(clock)
+    clock.t = 3.5                            # mid sub-bucket
+    h.observe(1.0)
+    assert h.count(now=3.6) == 1             # current partial bucket counts
+    assert h.quantile(1.0, now=3.6) == 1.0
+
+
+def test_clock_jump_larger_than_window_empties_it():
+    clock = FakeClock()
+    h = _hist(clock)
+    for i in range(4):
+        clock.advance(1.0)
+        h.observe(float(i))
+    assert h.count() == 4
+    clock.advance(100.0)                     # jump >> window: all epochs stale
+    assert h.count() == 0
+    assert h.samples() == []
+    assert h.rate() == 0.0
+    # the ring is still writable afterwards (lazy eviction reset the cells)
+    h.observe(9.0)
+    assert h.count() == 1 and h.quantile(0.5) == 9.0
+
+
+def test_ring_reuse_evicts_old_epoch_lazily():
+    """Writing into a cell whose epoch wrapped resets it — stale samples
+    from window N must never leak into window N + sub_buckets."""
+    clock = FakeClock()
+    h = _hist(clock)
+    clock.t = 0.5
+    h.observe(111.0)
+    clock.t = 4.5                            # same ring index (0.5 % 4), new epoch
+    h.observe(222.0)
+    assert h.samples() == [222.0]
+
+
+# -- queries ------------------------------------------------------------------
+
+def test_multi_window_query_off_one_instrument():
+    """One instrument serves both burn windows: a query window shorter than
+    the instrument window sees only the recent sub-buckets."""
+    clock = FakeClock()
+    h = _hist(clock, window_s=8.0, sub_buckets=8)
+    clock.t = 0.5
+    h.observe(100.0)                         # old
+    clock.t = 7.5
+    h.observe(1.0)                           # recent
+    assert h.count(8.0) == 2
+    assert h.count(2.0) == 1
+    assert h.quantile(1.0, 2.0) == 1.0       # fast window misses the spike
+    assert h.quantile(1.0, 8.0) == 100.0
+    with pytest.raises(ValueError):
+        h.quantile(0.5, window_s=9.0)        # beyond the instrument window
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_quantiles_match_numpy_linear():
+    clock = FakeClock()
+    h = _hist(clock, window_s=30.0, sub_buckets=30)
+    vals = [0.3 * i for i in range(1, 40)]
+    for v in vals:
+        clock.advance(0.25)
+        h.observe(v)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert h.quantile(q) == pytest.approx(
+            float(np.percentile(vals, 100 * q)))
+    assert h.mean() == pytest.approx(float(np.mean(vals)))
+
+
+def test_windowed_counter_rate():
+    clock = FakeClock()
+    c = Registry().windowed_counter("ev", "t", window_s=4.0, sub_buckets=4,
+                                    clock=clock)
+    for _ in range(8):
+        clock.advance(0.25)
+        c.inc()
+    assert c.count() == 8
+    assert c.rate() == pytest.approx(8 / 4.0)   # whole-sub-bucket span
+    # at now=2.0 a 1 s query covers only the current sub-bucket (epoch 2),
+    # which holds exactly the t=2.0 increment
+    assert c.count(1.0) == 1
+    assert c.rate(1.0) == pytest.approx(1.0)
+    # a 2 s query adds epoch 1 (the four t in [1.0, 1.75] increments)
+    assert c.count(2.0) == 5
+    assert c.rate(2.0) == pytest.approx(2.5)
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+# -- overflow surfacing (windowed + base Histogram satellite) -----------------
+
+def test_windowed_reservoir_overflow_is_surfaced_never_silent():
+    clock = FakeClock()
+    h = _hist(clock, reservoir_per_bucket=4)
+    clock.t = 0.5
+    for v in range(10):                      # one sub-bucket, 10 observations
+        h.observe(float(v))
+    assert h.count() == 10                   # count is exact regardless
+    assert h.samples_dropped() == 6
+    assert h._snap({})["samples_dropped"] == 6
+    text = "\n".join(h._prom("w_s", {}))
+    assert "w_s_samples_dropped 6" in text
+
+
+def test_base_histogram_overflow_surfaced_in_snapshot_and_prom():
+    r = Registry()
+    h = r.histogram("lat_s", "t", reservoir=3)
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    assert not h.overflowed and h.samples_dropped == 0
+    h.observe(0.4)
+    h.observe(0.5)
+    assert h.overflowed and h.samples_dropped == 2
+    s = r.snapshot()["lat_s"]["series"][0]
+    assert s["samples_dropped"] == 2 and s["overflowed"] is True
+    assert parse_prometheus(r.to_prometheus())[
+        "lat_s_samples_dropped"][()] == 2.0
+
+
+# -- labeled families ---------------------------------------------------------
+
+def test_labeled_family_parent_aggregates_children():
+    clock = FakeClock()
+    r = Registry()
+    h = r.windowed_histogram("ttft_s", "t", ("replica",), window_s=4.0,
+                             sub_buckets=4, clock=clock)
+    clock.t = 0.5
+    h.labels(replica="0").observe(1.0)
+    h.labels(replica="1").observe(3.0)
+    assert h.count() == 2                    # parent = fleet-wide view
+    assert h.quantile(0.5) == 2.0
+    assert h.labels(replica="0").count() == 1
+    with pytest.raises(ValueError):
+        h.observe(1.0)                       # parent itself takes no writes
+    snap = r.snapshot()["ttft_s"]["series"]
+    assert {s["labels"]["replica"] for s in snap} == {"0", "1"}
+
+
+# -- export / HELP escaping ---------------------------------------------------
+
+def test_help_escaping_round_trip():
+    r = Registry()
+    help_text = 'tricky: back\\slash and\nnewline and "quotes"'
+    r.counter("tricky_total", help_text).inc()
+    text = r.to_prometheus()
+    assert "\ntricky_total 1" in text        # exposition still one-line
+    helps = parse_help(text)
+    assert helps["tricky_total"] == help_text
+    # values still parse around the escaped HELP line
+    assert parse_prometheus(text)["tricky_total"][()] == 1.0
+
+
+def test_windowed_prometheus_types_and_summary_shape():
+    clock = FakeClock()
+    r = Registry()
+    h = r.windowed_histogram("w_s", "t", window_s=4.0, sub_buckets=4,
+                             clock=clock)
+    c = r.windowed_counter("wc", "t", window_s=4.0, sub_buckets=4,
+                           clock=clock)
+    clock.t = 0.5
+    h.observe(2.0)
+    c.inc()
+    text = r.to_prometheus()
+    assert "# TYPE w_s summary" in text      # windowed kinds map to standard
+    assert "# TYPE wc gauge" in text         # types scrapers understand
+    parsed = parse_prometheus(text)
+    assert parsed["w_s"][(("quantile", "0.5"),)] == 2.0
+    assert parsed["w_s_count"][()] == 1.0
+    assert parsed["wc"][()] == 1.0
+
+
+def test_snapshot_deterministic_under_fake_clock():
+    def build():
+        clock = FakeClock()
+        r = Registry()
+        h = r.windowed_histogram("w_s", "t", window_s=4.0, sub_buckets=4,
+                                 clock=clock)
+        c = r.windowed_counter("wc", "t", window_s=4.0, sub_buckets=4,
+                               clock=clock)
+        for i in range(9):
+            clock.advance(0.25)
+            h.observe(0.1 * i)
+            c.inc()
+        return json.dumps(r.snapshot(), sort_keys=True)
+    assert build() == build()
+
+
+def test_constructor_validation():
+    clock = FakeClock()
+    with pytest.raises(ValueError):
+        Registry().windowed_histogram("bad", window_s=0.0, clock=clock)
+    with pytest.raises(ValueError):
+        Registry().windowed_histogram("bad", sub_buckets=0, clock=clock)
+    # re-registration is idempotent, kind clash rejected
+    r = Registry()
+    a = r.windowed_histogram("w_s", clock=clock)
+    assert r.windowed_histogram("w_s", clock=clock) is a
+    with pytest.raises(ValueError):
+        r.counter("w_s")

@@ -1,0 +1,350 @@
+"""SLO burn-rate alerting (repro.obs.slo) and the router's SLO-driven
+degradation controller:
+
+* the one-line objective DSL (``parse``) and its validation;
+* multi-window burn evaluation — PAGE needs fast AND slow burn with sample
+  support, a single spike cannot flap the ladder, de-escalation waits out
+  ``clear_s`` (asymmetric hysteresis);
+* the controller ladder on a live router — burn-driven shed to int8 with
+  the ``shed_queue_depth`` floor DISABLED (proving the SLO signal acts on
+  its own), admission tightening to ``max_queue // tighten_factor`` visible
+  as :class:`RejectedError`, and probe-back with hysteresis;
+* the ISSUE-10 acceptance chaos loop: a flaky replica (raise/hang plan from
+  serve.faults) under a deterministic FakeClock drives breach -> PAGE ->
+  tighten+shed -> burn clears -> probe -> recover -> healthy, asserted
+  end-to-end from the obs snapshot, the controller/alert event records, and
+  the trace.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro import configs
+from repro.models.model import build_model
+from repro.obs import AlertState, Objective, Registry, SloMonitor, Tracer
+from repro.serve import lifecycle as lc
+from repro.serve.batcher import BatchServer, Request
+from repro.serve.faults import FakeClock, FaultPlan
+from repro.serve.router import (CTL_HEALTHY, CTL_TIGHTENED, ReplicaRouter,
+                                RouterConfig)
+
+MAX_LEN = 48
+MAX_NEW = 4
+
+_STATE = {}
+
+
+def _setup():
+    if not _STATE:
+        cfg = configs.smoke_config(configs.get_config("minicpm-2b"))
+        cfg = dataclasses.replace(cfg, attention_impl="naive")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _STATE["m"] = (cfg, model, params)
+    return _STATE["m"]
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(int(l),))
+            for l in rng.integers(3, 10, n)]
+
+
+# -- objective DSL ------------------------------------------------------------
+
+def test_objective_parse_dsl():
+    o = Objective.parse("ttft_ms p99 < 200")
+    assert (o.name, o.kind, o.quantile, o.threshold) == \
+        ("ttft_ms", "latency", 0.99, 200.0)
+    o = Objective.parse("itl_ms p50 < 1.5", fast_window_s=1.0,
+                        slow_window_s=6.0)
+    assert o.quantile == 0.5 and o.fast_window_s == 1.0
+    e = Objective.parse("error_rate < 0.1")
+    assert e.kind == "error_rate" and e.threshold == 0.1
+    assert e.effective_clear_s == pytest.approx(e.slow_window_s / 3)
+    for bad in ("ttft_ms 200", "p99 <", "error_rate p99 < 0.5", "x < -1",
+                "ttft_ms p99 < 0"):
+        with pytest.raises(ValueError):
+            Objective.parse(bad)
+    with pytest.raises(ValueError):
+        Objective("x", 1.0, fast_window_s=30.0, slow_window_s=5.0)
+    with pytest.raises(ValueError):
+        Objective("x", 1.0, kind="throughput")
+
+
+def test_monitor_rejects_duplicates_and_routes_by_kind():
+    clock = FakeClock()
+    r = Registry()
+    with pytest.raises(ValueError):
+        SloMonitor([Objective("a", 1.0), Objective("a", 2.0)],
+                   registry=r, clock=clock)
+    mon = SloMonitor([Objective("lat_ms", 100.0),
+                      Objective("error_rate", 0.5, kind="error_rate")],
+                     registry=r, clock=clock)
+    # mismatched-kind and unknown-name feeds are silent no-ops (the router
+    # feeds every objective name unconditionally)
+    mon.observe_latency("error_rate", 5.0)
+    mon.observe_event("lat_ms", True)
+    mon.observe_latency("nope", 5.0)
+    assert mon.evaluate(clock()) == AlertState.OK
+
+
+# -- burn evaluation / hysteresis --------------------------------------------
+
+def _latency_monitor(clock, **kw):
+    kw.setdefault("fast_window_s", 2.0)
+    kw.setdefault("slow_window_s", 8.0)
+    kw.setdefault("min_count", 3)
+    obj = Objective("lat_ms", 100.0, **kw)
+    reg = Registry()
+    return SloMonitor([obj], registry=reg, tracer=Tracer(clock=clock),
+                      clock=clock), reg, obj
+
+
+def test_page_requires_fast_and_slow_burn_with_sample_support():
+    clock = FakeClock()
+    mon, reg, obj = _latency_monitor(clock)
+    # sustained breach: bad observations across both windows
+    for _ in range(6):
+        clock.advance(0.25)
+        mon.observe_latency("lat_ms", 500.0)
+    assert mon.evaluate() == AlertState.PAGE
+    assert mon.states()["lat_ms"] is AlertState.PAGE
+    snap = reg.snapshot()
+    st = {s["labels"]["slo"]: s["value"]
+          for s in snap["slo_state"]["series"]}
+    assert st["lat_ms"] == 2
+    burns = {s["labels"]["window"]: s["value"]
+             for s in snap["slo_burn_rate"]["series"]}
+    assert burns["fast"] == pytest.approx(5.0)   # 500 / 100
+    assert burns["slow"] == pytest.approx(5.0)
+    trans = snap["slo_transitions_total"]["series"]
+    assert {(s["labels"]["to"], s["value"]) for s in trans} == {("PAGE", 1)}
+    ev = [s for s in mon.tracer.spans if s.name == "slo_alert"]
+    assert len(ev) == 1 and ev[0].attrs["to"] == "PAGE" \
+        and ev[0].attrs["frm"] == "OK"
+
+
+def test_single_spike_cannot_flap_min_count_floor():
+    clock = FakeClock()
+    mon, _, _ = _latency_monitor(clock)       # min_count=3
+    clock.advance(0.25)
+    mon.observe_latency("lat_ms", 10_000.0)   # one monster spike
+    clock.advance(0.25)
+    mon.observe_latency("lat_ms", 10_000.0)   # still under the floor
+    assert mon.evaluate() == AlertState.OK
+    assert mon.states()["lat_ms"] is AlertState.OK
+
+
+def test_deescalation_waits_out_clear_s():
+    clock = FakeClock()
+    mon, _, obj = _latency_monitor(clock, clear_s=3.0)
+    for _ in range(4):
+        clock.advance(0.25)
+        mon.observe_latency("lat_ms", 500.0)
+    assert mon.evaluate() == AlertState.PAGE
+    # the breach scrolls out of both windows...
+    clock.advance(9.0)
+    # ...but PAGE holds until the burn has been clear for clear_s
+    assert mon.evaluate() == AlertState.PAGE      # starts the clear timer
+    clock.advance(1.0)
+    assert mon.evaluate() == AlertState.PAGE      # 1.0 < clear_s
+    clock.advance(2.5)
+    assert mon.evaluate() == AlertState.OK        # 3.5 >= clear_s
+    t = mon.trackers["lat_ms"]
+    # a re-breach during the clear countdown resets it (timer, not latch)
+    for _ in range(4):
+        clock.advance(0.25)
+        mon.observe_latency("lat_ms", 500.0)
+    assert mon.evaluate() == AlertState.PAGE
+    clock.advance(9.0)
+    mon.evaluate()
+    assert t._below_since is not None
+    for _ in range(4):
+        clock.advance(0.25)
+        mon.observe_latency("lat_ms", 500.0)
+    assert mon.evaluate() == AlertState.PAGE and t._below_since is None
+
+
+def test_error_rate_objective_burns_on_bad_fraction():
+    clock = FakeClock()
+    reg = Registry()
+    mon = SloMonitor([Objective("error_rate", 0.25, kind="error_rate",
+                                fast_window_s=2.0, slow_window_s=8.0,
+                                min_count=4)],
+                     registry=reg, clock=clock)
+    for i in range(8):
+        clock.advance(0.25)
+        mon.observe_event("error_rate", ok=(i % 2 == 0))   # 50% bad
+    assert mon.evaluate() == AlertState.PAGE               # 0.5/0.25 = 2x burn
+    bf, bs = mon.trackers["error_rate"].last_burns
+    # slow window covers all 8 events exactly; the fast window clips the
+    # first (good) event, so its bad fraction is slightly higher
+    assert bs == pytest.approx(2.0) and bf >= 2.0
+
+
+# -- router controller --------------------------------------------------------
+
+def _fleet(reg, clock, *, objectives, max_queue=64, tighten_factor=4,
+           probe_s=0.5, fault_plan=None, max_retries=4):
+    cfg_m, model, params = _setup()
+    servers = [BatchServer(model, batch_slots=2, max_len=MAX_LEN,
+                           registry=reg),
+               BatchServer(model, batch_slots=2, max_len=MAX_LEN,
+                           quantized=True, registry=reg)]
+    rt = ReplicaRouter(
+        servers, params, fault_plan=fault_plan, clock=clock, registry=reg,
+        cfg=RouterConfig(step_timeout_s=5.0, quarantine_s=0.2,
+                         max_retries=max_retries, max_queue=max_queue,
+                         tighten_factor=tighten_factor, probe_s=probe_s,
+                         shed_queue_depth=999,   # floor DISABLED: any shed
+                         objectives=objectives))  # below is burn-driven
+    return cfg_m, rt
+
+
+def test_burn_driven_shed_independent_of_queue_depth_floor():
+    """With ``shed_queue_depth`` at 999 the old queue-depth knob can never
+    fire, and the float replica has free slots throughout — so a shed to
+    the int8 replica can ONLY come from the SLO controller's burn signal.
+
+    Phase 1 (two requests, fits the float replica) completes on the float
+    tier with zero sheds; its TTFT breaches the absurd 1 ms objective, the
+    controller pages; phase 2's requests are then shed to int8 even though
+    the float replica is idle."""
+    clock = FakeClock()
+    reg = Registry()
+    obj = Objective("ttft_ms", 1.0, fast_window_s=2.0, slow_window_s=8.0,
+                    min_count=1)              # any real TTFT breaches 1 ms
+    cfg, rt = _fleet(reg, clock, objectives=[obj])
+    prompts = _prompts(cfg, 4)
+    for i, p in enumerate(prompts[:2]):
+        rt.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW, eos_id=-1))
+    recs = rt.drive(max_ticks=4000)
+    assert all(r.tier == "float" for r in recs.values())
+    assert rt.stats["shed_to_quantized"] == 0
+    # a couple of idle ticks: the controller tick runs before dispatch, so
+    # it needs one step to see the final completions' TTFT observations
+    for _ in range(3):
+        rt.step()
+    assert rt.ctl_state == CTL_TIGHTENED
+    first_ctl = next(i for i, e in enumerate(rt.events)
+                     if e[0] == "controller")
+
+    for i, p in enumerate(prompts[2:], start=2):
+        rt.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW, eos_id=-1))
+    recs = rt.drive(max_ticks=4000)
+    assert all(r.state is lc.Lifecycle.DONE for r in recs.values())
+    assert rt.stats["shed_to_quantized"] >= 1
+    sheds = [e for e in rt.events if e[0] == "shed"]
+    assert sheds and all(rt.replicas[e[2]].tier == "int8" for e in sheds)
+    first_shed = next(i for i, e in enumerate(rt.events) if e[0] == "shed")
+    assert first_ctl < first_shed             # controller moved BEFORE any shed
+    assert all(recs[i].tier == "int8" for i in (2, 3))
+
+
+def test_admission_tightens_to_max_queue_over_factor():
+    clock = FakeClock()
+    reg = Registry()
+    obj = Objective("ttft_ms", 1.0, fast_window_s=2.0, slow_window_s=8.0,
+                    min_count=1)
+    cfg, rt = _fleet(reg, clock, objectives=[obj], max_queue=8,
+                     tighten_factor=4)
+    prompts = _prompts(cfg, 16)
+    for i, p in enumerate(prompts[:4]):
+        rt.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW, eos_id=-1))
+    rt.drive(max_ticks=4000)                  # TTFT > 1ms: controller pages
+    for _ in range(3):                        # let the controller tick see
+        rt.step()                             # the last completions
+    assert rt.ctl_state == CTL_TIGHTENED
+    assert rt.admission_limit() == 2          # 8 // 4
+    assert reg.get("router_admission_limit").value == 2
+    submitted, rejected = 0, None
+    for i, p in enumerate(prompts[4:], start=4):
+        try:
+            rt.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW,
+                              eos_id=-1))
+            submitted += 1
+        except lc.RejectedError as e:
+            rejected = e
+            break
+    assert submitted == 2 and rejected is not None
+    assert "tightened" in str(rejected)
+    assert rt.stats["rejected"] == 1
+
+
+def test_chaos_loop_breach_alert_shed_tighten_recover():
+    """ISSUE-10 acceptance: deterministic FakeClock chaos run. The flaky
+    replica's hang faults jump the shared clock 10 fake-seconds, so retried
+    requests complete with router TTFT far over threshold -> the SLO pages
+    -> the controller tightens and sheds to int8 -> the faults stop, the
+    burn scrolls out of both windows, clear_s + probe_s elapse -> recover.
+    Every leg is asserted from the metrics snapshot, the event records, and
+    the trace."""
+    clock = FakeClock()
+    reg = Registry()
+    obj = Objective.parse("ttft_ms p99 < 2000", fast_window_s=2.0,
+                          slow_window_s=8.0, min_count=2)
+    cfg, rt = _fleet(reg, clock, objectives=[obj],
+                     fault_plan=FaultPlan.flaky_replica(
+                         0, start=2, period=4, rounds=4, seed=0))
+    for i, p in enumerate(_prompts(cfg, 8)):
+        rt.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW, eos_id=-1))
+    recs = rt.drive(max_ticks=20_000)
+    assert all(r.state is lc.Lifecycle.DONE for r in recs.values())
+    assert rt.stats["retries"] >= 1, "fault plan never fired"
+
+    # the breach happened and was acted on while the run was live
+    ctr = reg.get("router_controller_total")
+    assert ctr.labels(action="tighten").value >= 1
+    assert rt.stats["shed_to_quantized"] >= 1
+    trans = reg.get("slo_transitions_total")
+    assert trans.labels(slo="ttft_ms", to="PAGE").value >= 1
+
+    # drain: faults are exhausted; keep ticking so the burn scrolls out of
+    # the slow window, clear_s elapses, and the probe window passes
+    for _ in range(1600):
+        rt.step()
+    assert rt.ctl_state == CTL_HEALTHY
+    assert rt.slo.states()["ttft_ms"] is AlertState.OK
+    assert ctr.labels(action="probe").value >= 1
+    assert ctr.labels(action="recover").value >= 1
+    assert trans.labels(slo="ttft_ms", to="OK").value >= 1
+
+    # snapshot view (what obs_check gates in CI)
+    snap = reg.snapshot()
+    assert [s["value"] for s in snap["slo_state"]["series"]] == [0]
+    assert snap["router_controller_state"]["series"][0]["value"] == 0
+    assert snap["router_admission_limit"]["series"][0]["value"] == \
+        rt.cfg.max_queue
+    rep_states = {s["labels"]["replica"]: s["value"]
+                  for s in snap["router_replica_state"]["series"]}
+    # replica 1 (never faulted) must be healthy; replica 0 may legitimately
+    # end PROBING if its last quarantine expired after the traffic drained
+    assert rep_states["1"] == 0 and rep_states["0"] in (0, 1)
+    ttft_rows = snap["router_ttft_ms_window"]["series"]
+    assert {r["labels"]["tier"] for r in ttft_rows} == {"float", "int8"}
+
+    # ladder ordering from the controller event record: tighten strictly
+    # before probe strictly before recover
+    actions = [e[1] for e in rt.events if e[0] == "controller"]
+    assert actions.index("tighten") < actions.index("probe") \
+        < actions.index("recover")
+
+    # trace: the alert and every controller move are point events with
+    # attrs, and the PAGE alert lands BEFORE the tighten move (the same
+    # controller tick evaluates, then acts)
+    spans = list(rt.tracer.spans)
+    alerts = [s for s in spans if s.name == "slo_alert"]
+    moves = [s for s in spans if s.name == "controller"]
+    assert any(s.attrs["to"] == "PAGE" for s in alerts)
+    assert any(s.attrs["to"] == "OK" for s in alerts)
+    assert moves and moves[-1].attrs["action"] == "recover"
+    i_page = spans.index(next(s for s in alerts if s.attrs["to"] == "PAGE"))
+    i_tight = spans.index(next(m for m in moves
+                               if m.attrs["action"] == "tighten"))
+    assert i_page < i_tight
+    page = spans[i_page]
+    assert page.attrs["burn_fast"] >= 1.0 and page.attrs["burn_slow"] >= 1.0
